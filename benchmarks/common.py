@@ -1,0 +1,22 @@
+"""Shared benchmark helpers: CSV emission + percentile utilities."""
+from __future__ import annotations
+
+import numpy as np
+
+ROWS: list[str] = []
+
+
+def emit(name: str, value: float, derived: str = ""):
+    """One CSV row: name,us_per_call,derived (per benchmarks/run.py spec)."""
+    row = f"{name},{value:.6g},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def geomean(xs):
+    xs = np.asarray(xs, np.float64)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))

@@ -1,0 +1,29 @@
+"""Fig 13: concurrent Q12 streams. The shared invocation limit (and the
+coordinator's own fan-out capacity) bound aggregate throughput."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.engine import make_engine, run_query
+
+LIMIT = 1000                      # account-level parallel invocations
+
+
+def main(quick: bool = False):
+    sf = 0.002 if quick else 0.005
+    for users in ([1, 4] if quick else [1, 2, 4, 8, 16]):
+        # each user's query sees 1/users of the invocation budget, plus a
+        # coordinator fan-out penalty per concurrent stream (§6.5)
+        coord, _ = make_engine(sf=sf, seed=users,
+                               max_parallel=max(LIMIT // users, 4),
+                               target_bytes=1 << 20)
+        coord_overhead = 1.0 + 0.02 * (users - 1)
+        res = run_query(coord, "q12", {"join": 8})
+        lat = res.latency_s * coord_overhead
+        qph = users * 3600.0 / lat
+        emit(f"fig13_users{users}_qph", qph,
+             f"latency/user={lat:.2f}s; throughput levels off near the "
+             "invocation limit")
+
+
+if __name__ == "__main__":
+    main()

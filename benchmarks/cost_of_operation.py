@@ -1,0 +1,41 @@
+"""Figs 7/10: daily cost vs query rate; cost-per-query vs inter-arrival
+time; crossover points against provisioned systems."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, geomean
+from repro.core.cost import (PROVISIONED, max_queries_per_hour,
+                             provisioned_cost_per_query,
+                             provisioned_daily_cost, starling_daily_cost)
+from benchmarks.query_latency import run_all
+
+
+def main(quick: bool = False):
+    res = run_all(sf=0.002 if quick else 0.01, repeats=1)
+    cpq = geomean([r["cost"] for r in res.values()])
+    lat = geomean([r["latency"] for r in res.values()])
+    emit("fig10_starling_cost_per_query", cpq, "fixed wrt inter-arrival")
+
+    # Fig 7a: crossover rate where a provisioned cluster becomes cheaper.
+    for sys_ in ("redshift-dc-dk", "redshift-ds-dk", "presto-16", "presto-4"):
+        daily = provisioned_daily_cost(sys_)
+        # starling_daily = 8 + cpq * qph * 24 == daily  =>  qph*
+        qph = max((daily - 8.0) / (cpq * 24.0), 0.0)
+        emit(f"fig7_crossover_qph_{sys_}", qph,
+             f"daily(provisioned)=${daily:.0f}; paper: ~60 qph vs redshift "
+             "at 1TB")
+
+    emit("fig7_starling_max_qph", max_queries_per_hour(lat),
+         "back-to-back ceiling at measured geomean latency")
+
+    # Fig 10: cost-per-query at a few inter-arrival times
+    for gap in (30, 60, 120, 600, 3600):
+        for sys_ in ("redshift-dc-dk", "presto-16"):
+            c = provisioned_cost_per_query(sys_, gap)
+            emit(f"fig10_{sys_}_gap{gap}s", c,
+                 f"starling=${cpq:.5f} (constant)")
+
+
+if __name__ == "__main__":
+    main()

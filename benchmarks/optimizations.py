@@ -1,0 +1,54 @@
+"""Fig 15: Q12 latency as the performance optimizations are enabled one by
+one (parallel reads -> +RSM -> +WSM -> +doublewrite), 10 seeds each; cost
+stays ~constant while mean latency and variance fall."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.engine import make_engine, run_query
+from repro.core.stragglers import RSMPolicy, StragglerConfig, WSMPolicy
+
+CONFIGS = [
+    ("none", StragglerConfig(rsm=RSMPolicy(enabled=False),
+                             wsm=WSMPolicy(enabled=False),
+                             doublewrite=False, parallel_reads=1,
+                             pipelining=False, backup_tasks=False)),
+    ("parallel_reads", StragglerConfig(rsm=RSMPolicy(enabled=False),
+                                       wsm=WSMPolicy(enabled=False),
+                                       doublewrite=False, parallel_reads=16,
+                                       pipelining=False, backup_tasks=False)),
+    ("+rsm", StragglerConfig(wsm=WSMPolicy(enabled=False), doublewrite=False,
+                             parallel_reads=16, pipelining=False,
+                             backup_tasks=False)),
+    ("+wsm", StragglerConfig(doublewrite=False, parallel_reads=16,
+                             pipelining=False, backup_tasks=False)),
+    ("+doublewrite", StragglerConfig(parallel_reads=16, pipelining=False,
+                                     backup_tasks=False)),
+    ("+pipelining", StragglerConfig(parallel_reads=16)),
+]
+
+
+def main(quick: bool = False):
+    sf = 0.002 if quick else 0.01
+    seeds = range(3) if quick else range(10)
+    results = {}
+    for name, pol in CONFIGS:
+        lats, costs = [], []
+        for s in seeds:
+            coord, _ = make_engine(sf=sf, seed=100 + s, policy=pol,
+                                   target_bytes=200_000 if quick else 500_000)
+            res = run_query(coord, "q12", {"join": 16})
+            lats.append(res.latency_s)
+            costs.append(res.cost.total)
+        results[name] = (float(np.mean(lats)), float(np.std(lats)),
+                         float(np.mean(costs)))
+        emit(f"fig15_q12_{name}_mean_s", results[name][0],
+             f"std={results[name][1]:.3f}; cost=${results[name][2]:.5f}")
+    speedup = results["none"][0] / results["+pipelining"][0]
+    emit("fig15_total_speedup", speedup,
+         "paper: ~6x from no-opts to all-opts on Q12")
+
+
+if __name__ == "__main__":
+    main()

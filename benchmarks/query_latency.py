@@ -1,0 +1,45 @@
+"""Figs 8/9: per-query latency + geometric mean (median of 3 runs), and
+Fig 16-style core-seconds accounting."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, geomean
+from repro.core.engine import make_engine, run_query
+from repro.relational.tpch import QUERIES
+
+
+def run_all(sf: float = 0.01, repeats: int = 3, seed: int = 0):
+    out = {}
+    for q in sorted(QUERIES):
+        lats, costs, core_s = [], [], []
+        for r in range(repeats):
+            coord, _ = make_engine(sf=sf, seed=seed + r,
+                                   target_bytes=1 << 20)
+            res = run_query(coord, q)
+            lats.append(res.latency_s)
+            costs.append(res.cost.total)
+            core_s.append(res.task_seconds * 2)      # 2 vCPU per worker (§7)
+        out[q] = {"latency": float(np.median(lats)),
+                  "cost": float(np.median(costs)),
+                  "core_s": float(np.median(core_s))}
+    return out
+
+
+def main(quick: bool = False):
+    sf = 0.002 if quick else 0.01
+    rep = 1 if quick else 3
+    res = run_all(sf=sf, repeats=rep)
+    for q, r in res.items():
+        emit(f"fig8_{q}_latency_s", r["latency"],
+             f"cost=${r['cost']:.5f}; core_s={r['core_s']:.1f}")
+    emit("fig9_geomean_latency_s", geomean([r["latency"] for r in
+                                            res.values()]),
+         f"sf={sf}; paper(1TB): Starling geomean beats all S3-reading "
+         "systems")
+    emit("fig16_total_core_seconds", sum(r["core_s"] for r in res.values()),
+         "paper: Starling uses less compute than presto-16 on most queries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-cell table
+(compute / memory / collective terms, dominant bottleneck, useful-flops
+ratio) and emit both CSV rows and the markdown table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load() -> list[dict]:
+    return sorted((json.load(open(f)) for f in glob.glob(str(ART / "*.json"))),
+                  key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute ms | memory ms | coll ms | "
+           "dominant | useful | mem/dev GB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        ro, m = r["roofline"], r["memory"]
+        fits = "yes" if m["fits"] else (
+            "corr" if m.get("fits_tpu_corrected") else "NO")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['compute_s']*1e3:.1f} | {ro['memory_s']*1e3:.1f} "
+            f"| {ro['collective_s']*1e3:.1f} "
+            f"| {ro['dominant'].replace('_s','')} "
+            f"| {ro['useful_flops_ratio']:.2f} "
+            f"| {m['peak_estimate_bytes']/1e9:.2f} | {fits} |\n")
+    return "".join(out)
+
+
+def main(quick: bool = False):
+    rows = load()
+    if not rows:
+        emit("roofline_cells", 0, "no dry-run artifacts; run launch.dryrun")
+        return
+    emit("roofline_cells", len(rows), "dry-run cells analyzed")
+    n_fit = sum(1 for r in rows
+                if r["memory"]["fits"] or r["memory"].get(
+                    "fits_tpu_corrected"))
+    emit("roofline_cells_fit_16gb", n_fit, "raw or TPU-corrected")
+    worst = min(rows, key=lambda r: r["roofline"]["useful_flops_ratio"]
+                if r["shape"].startswith("train") else 1e9)
+    emit("roofline_worst_useful_ratio",
+         worst["roofline"]["useful_flops_ratio"],
+         f"{worst['arch']} {worst['shape']} {worst['mesh']}")
+    coll = max(rows, key=lambda r: r["roofline"]["collective_s"])
+    emit("roofline_most_collective_bound_ms",
+         coll["roofline"]["collective_s"] * 1e3,
+         f"{coll['arch']} {coll['shape']} {coll['mesh']}")
+    (ART.parent / "roofline_table.md").write_text(markdown_table(rows))
+    emit("roofline_table_md", 1.0, str(ART.parent / "roofline_table.md"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Run every benchmark (one module per paper table/figure) and print the
+``name,us_per_call,derived`` CSV. ``--quick`` shrinks sizes for CI."""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (concurrency, cost_of_operation, optimizations,
+                            parallel_reads, query_latency, roofline,
+                            scalability, shuffle_cost, straggler_cdf,
+                            tunable)
+    mods = [("parallel_reads", parallel_reads),
+            ("straggler_cdf", straggler_cdf),
+            ("shuffle_cost", shuffle_cost),
+            ("query_latency", query_latency),
+            ("cost_of_operation", cost_of_operation),
+            ("scalability", scalability),
+            ("concurrency", concurrency),
+            ("tunable", tunable),
+            ("optimizations", optimizations),
+            ("roofline", roofline)]
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod.main(quick=args.quick)
+            print(f"bench_{name}_wall_s,{time.time()-t0:.2f},ok",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — a bench failure is a result
+            print(f"bench_{name}_wall_s,{time.time()-t0:.2f},FAILED {e!r}",
+                  flush=True)
+            raise
+
+
+if __name__ == "__main__":
+    main()

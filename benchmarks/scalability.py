@@ -1,0 +1,43 @@
+"""Figs 11/12: scaling the dataset. Starling scales by adding tasks per
+stage (+ multi-stage shuffles for the large joins) without reprovisioning."""
+from __future__ import annotations
+
+from benchmarks.common import emit, geomean
+from repro.core.engine import make_engine, run_query
+
+QS = ["q1", "q3", "q6", "q12"]
+
+
+def _run(sf, ntasks=None, shuffle=None, seed=0):
+    coord, _ = make_engine(sf=sf, seed=seed, target_bytes=1 << 20)
+    out = {}
+    for q in QS:
+        kw = {}
+        if q == "q12" and shuffle:
+            kw["shuffle"] = shuffle
+        res = run_query(coord, q, ntasks.get(q) if ntasks else None, **kw)
+        out[q] = res
+    return out
+
+
+def main(quick: bool = False):
+    sf_small = 0.002 if quick else 0.005
+    sf_big = 4 * sf_small
+    small = _run(sf_small)
+    # scale up: 4x data, 4x join tasks, multi-stage shuffle for q12 (§6.4)
+    big = _run(sf_big, ntasks={"q12": {"join": 32}},
+               shuffle={"strategy": "multi", "p": 1 / 4, "f": 1 / 4})
+    for q in QS:
+        ratio = big[q].latency_s / max(small[q].latency_s, 1e-9)
+        emit(f"fig11_{q}_latency_ratio_4x_data", ratio,
+             f"{small[q].latency_s:.2f}s -> {big[q].latency_s:.2f}s; "
+             "paper: Starling scales near-flat by adding workers")
+    emit("fig12_cost_per_query_small",
+         geomean([small[q].cost.total for q in QS]), "")
+    emit("fig12_cost_per_query_4x",
+         geomean([big[q].cost.total for q in QS]),
+         "cost grows ~linearly with data; latency does not")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""§4.2 arithmetic: request counts and dollar cost, single vs multi-stage
+shuffle. Validates the paper's worked examples and flags its two internal
+inconsistencies (see EXPERIMENTS.md §Paper-validation)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.shuffle import choose_strategy, multi_stage, single_stage
+from repro.objectstore.store import GET_PRICE, PUT_PRICE
+
+
+def main(quick: bool = False):
+    # small shuffle: 512 producers, 128 consumers -> the paper's 5.7 cents
+    small = single_stage(512, 128)
+    emit("s42_small_single_cost", small.request_cost(doublewrite=False),
+         "paper: ~$0.057 (5.7 cents)")
+
+    # large shuffle single-stage: $5.24
+    big = single_stage(5120, 1280)
+    emit("s42_large_single_reads", big.reads(), "2sr = 13.1M GETs")
+    emit("s42_large_single_cost", big.reads() * GET_PRICE,
+         "paper: >$5 ($5.24)")
+
+    # multi-stage p=1/20, f=1/64
+    ms = multi_stage(5120, 1280, 1 / 20, 1 / 64)
+    reads_2x = ms.reads()                       # 2(s/p + r/f), our formula
+    reads_1x = reads_2x // 2                    # the paper's quoted $ uses 1x
+    emit("s42_large_multi_reads_2x", reads_2x,
+         "2(s/p+r/f); paper TEXT states this formula")
+    emit("s42_large_multi_cost_2x", reads_2x * GET_PRICE,
+         "two GETs per object read (header+range)")
+    emit("s42_large_multi_cost_1x", reads_1x * GET_PRICE,
+         "paper's quoted $0.073 matches the UN-doubled count")
+    emit("s42_large_multi_combiners", ms.combiners, "1/(pf) = 1280")
+    emit("s42_large_multi_extra_write_cost",
+         ms.extra_writes(doublewrite=False) * PUT_PRICE,
+         "2 writes x 1280 combiners = $0.0128 (paper text says $0.00128; "
+         "2560 PUTs x $5e-6 = $0.0128 - 10x typo in the paper)")
+
+    # the planner picks multi for the big shuffle, single for tiny ones
+    assert choose_strategy(5120, 1280).strategy == "multi"
+    assert choose_strategy(4, 2).strategy == "single"
+    emit("s42_planner_large", 1.0, "choose_strategy(5120,1280) -> multi")
+    emit("s42_planner_small", 0.0, "choose_strategy(4,2) -> single")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Figs 5/6 + §5 accounting: read/write completion CDFs with and without
+the model-driven mitigations, on the latency models calibrated to the
+paper's measurements."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, pct
+from repro.core.stragglers import RSMPolicy, WSMPolicy
+from repro.objectstore.latency import S3_GET_MODEL, S3_PUT_MODEL
+
+N_READS = 52_000          # the paper's microbenchmark size
+N_WRITES = 10_240
+READ_B = 256 * 1024
+WRITE_B = 100 * 1024 * 1024
+
+
+def reads(enabled: bool, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    pol = RSMPolicy(enabled=enabled)
+    ts, reqs = [], 0
+    for _ in range(N_READS):
+        t, n = pol.completion(S3_GET_MODEL, READ_B, 16, rng)
+        ts.append(t)
+        reqs += n
+    return np.asarray(ts), reqs
+
+
+def writes(mode: str, seed: int = 0):
+    """mode: off | single | full (Fig 6's three curves)."""
+    rng = np.random.default_rng(seed)
+    pol = WSMPolicy(enabled=(mode != "off"),
+                    post_send_timer=(mode == "full"))
+    ts, reqs = [], 0
+    for _ in range(N_WRITES):
+        t, n = pol.completion(S3_PUT_MODEL, WRITE_B, rng)
+        ts.append(t)
+        reqs += n
+    return np.asarray(ts), reqs
+
+
+def main(quick: bool = False):
+    global N_READS, N_WRITES
+    if quick:
+        N_READS, N_WRITES = 8000, 2000
+
+    t_off, _ = reads(False)
+    t_on, req_on = reads(True)
+    emit("fig5_read_p9999_no_rsm_s", pct(t_off, 99.99),
+         "paper: >1s without RSM")
+    emit("fig5_read_p9999_rsm_s", pct(t_on, 99.99),
+         "paper: ~0.25s with RSM")
+    trig = (req_on - N_READS) / N_READS
+    emit("fig5_rsm_trigger_rate", trig, "paper: ~0.003")
+    saved = float(np.sum(t_off) - np.sum(t_on))
+    extra_cost_s = (req_on - N_READS) * 0.008      # 8ms break-even (§5.1)
+    emit("fig5_rsm_compute_saved_s", saved,
+         f"paper: ~95s saved vs {extra_cost_s:.1f}s request cost")
+
+    w_off, _ = writes("off")
+    w_single, _ = writes("single")
+    w_full, req_w = writes("full")
+    emit("fig6_write_p99_no_wsm_s", pct(w_off, 99), "paper: ~9s")
+    emit("fig6_write_p99_single_timeout_s", pct(w_single, 99), "paper: ~5s")
+    emit("fig6_write_p99_full_wsm_s", pct(w_full, 99), "paper: ~3.8s")
+    emit("fig6_write_max_no_wsm_s", float(w_off.max()), "paper: >20s")
+    emit("fig6_wsm_trigger_rate", (req_w - N_WRITES) / N_WRITES,
+         "paper: ~0.31")
+
+
+if __name__ == "__main__":
+    main()

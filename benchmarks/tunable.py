@@ -1,0 +1,27 @@
+"""Fig 14: cost-latency frontier for Q12 by sweeping join tasks per stage
+(§4.3: more tasks = faster + costlier, until request costs dominate)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.engine import make_engine, run_query
+
+
+def main(quick: bool = False):
+    sf = 0.002 if quick else 0.01
+    sweep = [2, 8, 32] if quick else [2, 4, 8, 16, 32, 64]
+    pts = []
+    for nt in sweep:
+        coord, _ = make_engine(sf=sf, seed=11, target_bytes=1 << 20)
+        res = run_query(coord, "q12", {"join": nt})
+        pts.append((nt, res.latency_s, res.cost.total))
+        emit(f"fig14_q12_join{nt}_latency_s", res.latency_s,
+             f"cost=${res.cost.total:.5f}")
+    # frontier sanity: more tasks should not be strictly worse on latency
+    best_lat = min(p[1] for p in pts)
+    emit("fig14_best_latency_s", best_lat,
+         f"at join={min(p[0] for p in pts if p[1] == best_lat)}; "
+         "cost rises with task count (S3 requests dominate at high fan-out)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: the three public surfaces in one script.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Run a TPC-H query through the Starling engine (coordinator + stateless
+   workers + simulated S3 + shuffles + straggler mitigation).
+2. Train a reduced-config model for a few steps with the elastic runtime
+   (checkpoints through the same object store).
+3. Show the multi-stage-shuffle cost model (the paper's §4.2 arithmetic).
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.engine import make_engine, oracle, run_query          # noqa: E402
+from repro.core.shuffle import choose_strategy, single_stage          # noqa: E402
+from repro.configs.smoke import smoke_config                          # noqa: E402
+from repro.models.model import build_model                            # noqa: E402
+from repro.objectstore.store import ObjectStore, StoreConfig          # noqa: E402
+from repro.runtime.train_loop import ElasticTrainer, JobConfig        # noqa: E402
+
+print("=== 1. query: TPC-H Q12 on the serverless engine ===")
+coord, tables = make_engine(sf=0.005)
+res = run_query(coord, "q12", {"join": 8})
+print(f"latency {res.latency_s:.2f}s (virtual), cost ${res.cost.total:.5f}, "
+      f"{res.task_count} tasks, {res.backup_count} backup tasks")
+exp = oracle("q12", tables)
+print(f"result rows: {len(res.result)} (oracle: {len(exp)})")
+
+print("\n=== 2. train: elastic stateless step-tasks ===")
+bundle = build_model(smoke_config("smollm-135m"))
+store = ObjectStore(StoreConfig(simulate_visibility_lag=False))
+trainer = ElasticTrainer(bundle, store, JobConfig(
+    steps_per_task=2, total_steps=6, batch=4, seq=32))
+for m in trainer.run():
+    print(f"step {m['step']} loss {m['loss']:.4f}")
+
+print("\n=== 3. shuffle planning (paper §4.2) ===")
+print(f"single 5120x1280: ${single_stage(5120, 1280).request_cost():.2f}")
+best = choose_strategy(5120, 1280)
+print(f"chosen: {best.strategy} p=1/{round(1/best.p)} f=1/{round(1/best.f)} "
+      f"-> ${best.request_cost():.3f}")

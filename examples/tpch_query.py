@@ -1,0 +1,30 @@
+"""End-to-end driver: every TPC-H query, single- vs multi-stage shuffle,
+with per-stage timing and cost — the paper's Table-1 user story.
+
+  PYTHONPATH=src python examples/tpch_query.py [sf]
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.engine import make_engine, oracle, run_query          # noqa: E402
+from repro.relational.tpch import QUERIES                             # noqa: E402
+
+sf = float(sys.argv[1]) if len(sys.argv) > 1 else 0.005
+coord, tables = make_engine(sf=sf)
+print(f"TPC-H @ sf={sf}: {len(tables['lineitem'])} lineitem rows")
+print(f"{'query':6s} {'latency':>9s} {'cost':>10s} {'tasks':>6s} "
+      f"{'backups':>7s}  matches_oracle")
+for q in sorted(QUERIES):
+    res = run_query(coord, q)
+    exp = oracle(q, tables)
+    ok = len(res.result) == len(exp)
+    print(f"{q:6s} {res.latency_s:8.2f}s ${res.cost.total:9.5f} "
+          f"{res.task_count:6d} {res.backup_count:7d}  {ok}")
+
+print("\nq12 with the multi-stage shuffle (paper §4.2):")
+res = run_query(coord, "q12", {"join": 16},
+                shuffle={"strategy": "multi", "p": 1 / 4, "f": 1 / 4})
+print(f"  latency {res.latency_s:.2f}s, cost ${res.cost.total:.5f}, "
+      f"stages: {list(res.stage_times)}")

@@ -1,0 +1,269 @@
+"""Coordinator (paper §2.3, §4.3, §4.4): schedules the task DAG.
+
+Discrete-event scheduling in virtual time over real task executions:
+  * invocation-limit: at most `max_parallel` concurrent workers (§4.3) —
+    a slot heap; a task's virtual start = max(stage ready, slot free);
+  * pipelining (§4.4): a consuming stage becomes ready when
+    `pipeline_fraction` of each producer finished (reads of late inputs
+    still wait on the producers' actual end times via per-input avails);
+  * multi-stage shuffle (§4.2): a `shuffle: {"strategy": "multi"}` join
+    inserts combiner tasks per core/shuffle.py;
+  * backup tasks (§5, power-of-two-choices at worker granularity): a task
+    running longer than `backup_factor x stage median` is duplicated; the
+    first writer wins (the store's conditional PUT), completion is the min.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import shuffle as SH
+from repro.core.cost import LAMBDA_GB_S, LAMBDA_PER_REQ, WORKER_MEM_GB, \
+    QueryCost
+from repro.core.plan import out_key, stage_by_name, validate_plan
+from repro.core.stragglers import StragglerConfig
+from repro.core.worker import PartInput, TaskResult, Worker
+from repro.objectstore.store import ObjectStore
+from repro.relational.table import Table, deserialize_table, serialize_table
+
+INVOKE_OVERHEAD_S = 0.030            # Lambda invoke + runtime startup
+COLD_STRAGGLER_PROB = 0.01           # slow-worker tail (backup-task target)
+
+
+@dataclasses.dataclass
+class QueryResult:
+    name: str
+    latency_s: float
+    result: Table
+    cost: QueryCost
+    task_count: int
+    backup_count: int
+    stage_times: dict
+    task_seconds: float
+
+    @property
+    def dollars(self) -> float:
+        return self.cost.total
+
+
+class Coordinator:
+    def __init__(self, store: ObjectStore, base_splits: dict[str, list[str]],
+                 policy: StragglerConfig | None = None, *, seed: int = 0,
+                 max_parallel: int = 1000, compute_scale: float = 1.0):
+        self.store = store
+        self.base_splits = base_splits
+        self.policy = policy or StragglerConfig()
+        self.rng = np.random.default_rng(seed)
+        self.max_parallel = max_parallel
+        self.compute_scale = compute_scale
+        self._small_cache: dict[str, Table] = {}
+
+    # ------------------------------------------------------------ helpers
+    def _base_reader(self, worker: Worker):
+        """Broadcast-read a small base table (charged as GETs; see DESIGN)."""
+        def read(table: str) -> Table:
+            if table not in self._small_cache:
+                tabs = [deserialize_table(self.store.get(k))
+                        for k in self.base_splits[table]]
+                self._small_cache[table] = Table.concat(tabs)
+            worker.client.gets += len(self.base_splits[table])
+            return self._small_cache[table]
+        return read
+
+    def _worker(self) -> Worker:
+        return Worker(self.store, self.policy,
+                      np.random.default_rng(self.rng.integers(2 ** 63)),
+                      self.compute_scale)
+
+    def _slowdown(self) -> float:
+        f = float(self.rng.lognormal(0.0, 0.06))
+        if self.rng.random() < COLD_STRAGGLER_PROB:
+            f *= 2.0 + float(self.rng.pareto(1.5))
+        return f
+
+    def _consumer_tasks(self, plan, st) -> int:
+        """Partition fan-out of a producing stage = consumer's task count."""
+        for other in plan["stages"]:
+            if other.get("kind") in ("join",) and \
+                    st["name"] in (other.get("left"), other.get("right")):
+                return self._ntasks(plan, other)
+        return 1
+
+    def _ntasks(self, plan, st) -> int:
+        if st["kind"] == "scan":
+            return st["tasks"] or len(self.base_splits[st["table"]])
+        return max(st.get("tasks", 1), 1)
+
+    # ------------------------------------------------------------ run
+    def run_query(self, plan: dict, t0: float = 0.0) -> QueryResult:
+        validate_plan(plan)
+        query = plan["name"]
+        slots: list[float] = [t0] * self.max_parallel
+        ends: dict[str, list[float]] = {}         # stage -> task end times
+        keys: dict[str, list[str]] = {}           # stage -> output keys
+        nparts: dict[str, int] = {}               # stage -> partition count
+        gets = puts = invocations = backups = 0
+        task_seconds = 0.0
+        final_result = None
+        stage_windows: dict[str, tuple[float, float]] = {}
+
+        def ready_time(dep_names) -> float:
+            t = t0
+            frac = self.policy.pipeline_fraction if self.policy.pipelining \
+                else 1.0
+            for d in dep_names:
+                te = sorted(ends[d])
+                idx = min(int(math.ceil(frac * len(te))), len(te)) - 1
+                t = max(t, te[max(idx, 0)])
+            return t
+
+        def schedule(ready: float) -> float:
+            """Claim the earliest slot; returns virtual start time."""
+            i = int(np.argmin(slots))
+            start = max(slots[i], ready) + INVOKE_OVERHEAD_S
+            return start, i
+
+        def finish(slot_i: int, end: float):
+            slots[slot_i] = end
+
+        def run_stage(st):
+            nonlocal gets, puts, invocations, backups, task_seconds, \
+                final_result
+            name = st["name"]
+            n = self._ntasks(plan, st)
+            ready = ready_time(st["deps"])
+            results: list[TaskResult] = []
+            starts: list[float] = []
+            durs: list[float] = []
+            for ti in range(n):
+                w = self._worker()
+                start, slot = schedule(ready)
+                r = self._run_task(plan, st, ti, w, start, ends, keys,
+                                   nparts)
+                # worker slowdown (Lambda variability)
+                dur = (r.virtual_end - start) * self._slowdown()
+                finish(slot, start + dur)
+                results.append(r)
+                starts.append(start)
+                durs.append(dur)
+                invocations += 1
+                gets += r.gets
+                puts += r.puts
+                if r.result is not None:
+                    final_result = r.result
+            # backup tasks (§5 power-of-two-choices at task granularity)
+            med = float(np.median(durs)) if durs else 0.0
+            end_times = []
+            for i, (r, start) in enumerate(zip(results, starts)):
+                end = start + durs[i]
+                if self.policy.backup_tasks and med > 0 and \
+                        durs[i] > self.policy.backup_factor * med:
+                    detect = start + self.policy.backup_factor * med
+                    dup = med * self._slowdown() + INVOKE_OVERHEAD_S
+                    end = min(end, detect + dup)
+                    backups += 1
+                    invocations += 1
+                    gets += r.gets               # duplicate re-reads inputs
+                    puts += r.puts
+                    task_seconds += min(dup, durs[i])
+                end_times.append(end)
+                task_seconds += durs[i]
+            ends[name] = end_times
+            keys[name] = [r.key for r in results]
+            stage_windows[name] = (min(starts), max(end_times))
+
+        for st in list(plan["stages"]):          # combiners splice in
+            if st["kind"] == "join" and \
+                    st.get("shuffle", {}).get("strategy") == "multi":
+                self._insert_combiners(plan, st, run_stage, ends, keys,
+                                       nparts)
+            run_stage(st)
+
+        last = plan["stages"][-1]["name"]
+        latency = max(ends[last]) - t0
+        cost = QueryCost(task_seconds * WORKER_MEM_GB, invocations, gets,
+                         puts)
+        return QueryResult(query, latency, final_result, cost,
+                           invocations - backups, backups,
+                           {k: (round(a - t0, 3), round(b - t0, 3))
+                            for k, (a, b) in stage_windows.items()},
+                           task_seconds)
+
+    # ---------------------------------------------------------- task exec
+    def _run_task(self, plan, st, ti, w: Worker, start, ends, keys, nparts
+                  ) -> TaskResult:
+        query = plan["name"]
+        kind = st["kind"]
+        base_reader = self._base_reader(w)
+        if kind == "scan":
+            n_out = self._consumer_tasks(plan, st)
+            nparts[st["name"]] = n_out
+            split = self.base_splits[st["table"]][
+                ti % len(self.base_splits[st["table"]])]
+            return w.run_scan(query, st, ti, split, 0.0, start, n_out,
+                              base_reader)
+        if kind == "join":
+            n_out = self._consumer_tasks(plan, st)
+            nparts[st["name"]] = n_out
+            left = self._side_inputs(plan, st, st["left"], ti, ends, keys,
+                                     nparts)
+            right = self._side_inputs(plan, st, st["right"], ti, ends, keys,
+                                      nparts)
+            return w.run_join(query, st, ti, left, right, start, n_out,
+                              base_reader)
+        if kind == "combine":
+            spec = st["assign"][ti]
+            src = st["source"]
+            inputs = [PartInput(keys[src][fi], ends[src][fi],
+                                nparts[src], spec["partitions"][0],
+                                spec["partitions"][1] - 1)
+                      for fi in range(*spec["files"])]
+            return w.run_combine(query, st, ti, inputs, start)
+        if kind == "final_agg":
+            dep = st["deps"][0]
+            inputs = list(zip(keys[dep], ends[dep]))
+            return w.run_final(query, st, inputs, start)
+        raise ValueError(kind)
+
+    def _side_inputs(self, plan, st, side: str, ti, ends, keys, nparts
+                     ) -> list[PartInput]:
+        """Which objects + partition ranges feed join task ti from `side`.
+
+        Single-stage: every producer object, partition ti (2sr reads total).
+        Multi-stage: only the combiners covering partition ti (r/f reads).
+        """
+        comb = f"{st['name']}__combine_{side}"
+        if comb in keys:                       # combined side
+            cst = stage_by_name(plan, comb)
+            out = []
+            for ci, spec in enumerate(cst["assign"]):
+                lo, hi = spec["partitions"]
+                if lo <= ti < hi:
+                    out.append(PartInput(keys[comb][ci], ends[comb][ci],
+                                         hi - lo, ti - lo, ti - lo))
+            return out
+        return [PartInput(k, e, nparts[side], ti, ti)
+                for k, e in zip(keys[side], ends[side])]
+
+    def _insert_combiners(self, plan, st, run_stage, ends, keys, nparts):
+        """Materialize combine stages for a multi-stage shuffle join."""
+        sh = st["shuffle"]
+        r = self._ntasks(plan, st)
+        for side_name in ("left", "right"):
+            src = st[side_name]
+            s = len(keys[src])
+            # clamp the split factors to the actual producer/consumer counts
+            a = max(1, min(int(round(1 / sh.get("p", 1 / 4))), r))
+            b = max(1, min(int(round(1 / sh.get("f", 1 / 4))), s))
+            plan_obj = SH.multi_stage(s, r, 1.0 / a, 1.0 / b)
+            assign = SH.combiner_assignment(plan_obj)
+            cname = f"{st['name']}__combine_{side_name}"
+            cst = {"name": cname, "kind": "combine", "source": src,
+                   "tasks": len(assign), "assign": assign, "deps": [src]}
+            # splice into the plan for introspection; run immediately
+            plan["stages"].insert(
+                [i for i, x in enumerate(plan["stages"])
+                 if x["name"] == st["name"]][0], cst)
+            run_stage(cst)

@@ -1,0 +1,74 @@
+"""Dollar-cost model (paper §6, July-2019 prices).
+
+Lambda: $0.0000166667 per GB-second + $0.20 per 1M invocations; Starling
+workers are ~3GB / 2 vCPU. S3: GET $0.0004/1k, PUT $0.005/1k (store.py).
+Coordinator: one small VM, $8/day. Provisioned comparisons (Fig 7/10):
+on-demand hourly rates for the paper's configurations.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+LAMBDA_GB_S = 0.0000166667
+LAMBDA_PER_REQ = 0.20 / 1e6
+WORKER_MEM_GB = 3.0
+COORDINATOR_PER_DAY = 8.0
+
+# provisioned systems (paper §6.1): $/hr, node count
+PROVISIONED = {
+    "redshift-dc-dk": {"rate": 4.80, "nodes": 4},
+    "redshift-dc-dd": {"rate": 4.80, "nodes": 4},
+    "redshift-ds-dk": {"rate": 6.80, "nodes": 4},
+    "redshift-ds-dd": {"rate": 6.80, "nodes": 4},
+    "spectrum": {"rate": 4.80, "nodes": 4, "scan_per_tb": 5.0},
+    "presto-4": {"rate": 2.128, "nodes": 5},
+    "presto-16": {"rate": 2.128, "nodes": 17},
+}
+ATHENA_PER_TB = 5.0
+
+
+@dataclasses.dataclass
+class QueryCost:
+    lambda_gb_s: float
+    invocations: int
+    gets: int
+    puts: int
+
+    @property
+    def lambda_cost(self) -> float:
+        return (self.lambda_gb_s * LAMBDA_GB_S
+                + self.invocations * LAMBDA_PER_REQ)
+
+    @property
+    def s3_cost(self) -> float:
+        from repro.objectstore.store import GET_PRICE, PUT_PRICE
+        return self.gets * GET_PRICE + self.puts * PUT_PRICE
+
+    @property
+    def total(self) -> float:
+        return self.lambda_cost + self.s3_cost
+
+
+def starling_daily_cost(cost_per_query: float, queries_per_hour: float
+                        ) -> float:
+    return COORDINATOR_PER_DAY + cost_per_query * queries_per_hour * 24.0
+
+
+def provisioned_daily_cost(system: str) -> float:
+    p = PROVISIONED[system]
+    return p["rate"] * p["nodes"] * 24.0
+
+
+def provisioned_cost_per_query(system: str, interarrival_s: float,
+                               scan_tb: float = 0.0) -> float:
+    """Cost attributed to one query when queries arrive every
+    `interarrival_s` seconds (the cluster bills while idle too)."""
+    p = PROVISIONED[system]
+    c = p["rate"] * p["nodes"] * interarrival_s / 3600.0
+    c += p.get("scan_per_tb", 0.0) * scan_tb
+    return c
+
+
+def max_queries_per_hour(latency_s: float) -> float:
+    """Back-to-back ceiling (the line-length in Fig 7)."""
+    return 3600.0 / max(latency_s, 1e-9)

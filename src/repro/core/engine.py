@@ -1,0 +1,100 @@
+"""End-to-end glue: load base tables into the store, run queries, oracle.
+
+``oracle`` executes the same logical query single-threaded over the full
+tables using the relational ops directly — no store, no shuffle, no
+partitioning — giving an independent reference for the distributed engine's
+results (tests/test_query_engine.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.coordinator import Coordinator, QueryResult
+from repro.core.plan import stage_by_name
+from repro.core.stragglers import StragglerConfig
+from repro.objectstore.store import ObjectStore, StoreConfig
+from repro.relational import ops as OPS
+from repro.relational.table import Table, serialize_table
+from repro.relational.tpch import QUERIES, generate
+
+
+def load_base_tables(store: ObjectStore, tables: dict[str, Table],
+                     target_bytes: int = 4 << 20) -> dict[str, list[str]]:
+    """Write each table as row-sliced serialized objects (~target_bytes).
+
+    The paper stores base tables as ORC objects of a few hundred MB; scaled
+    down here with the dataset scale.
+    """
+    splits: dict[str, list[str]] = {}
+    for name, t in tables.items():
+        n = len(t)
+        total = len(serialize_table(t)) if n else 1
+        nsplit = max(1, int(round(total / target_bytes)))
+        rows = max(1, n // nsplit)
+        ks = []
+        for i in range(0, max(n, 1), rows):
+            idx = np.arange(i, min(i + rows, n))
+            key = f"base/{name}/p{len(ks)}"
+            store.put(key, serialize_table(t.take(idx)))
+            ks.append(key)
+        splits[name] = ks
+    return splits
+
+
+def make_engine(sf: float = 0.002, *, seed: int = 0,
+                policy: StragglerConfig | None = None,
+                max_parallel: int = 1000, target_bytes: int = 1 << 20):
+    """(coordinator, tables) over a fresh simulated store."""
+    tables = generate(sf, seed=seed)
+    store = ObjectStore(StoreConfig(seed=seed, time_scale=0.0,
+                                    simulate_visibility_lag=False))
+    splits = load_base_tables(store, tables, target_bytes)
+    coord = Coordinator(store, splits, policy, seed=seed,
+                        max_parallel=max_parallel)
+    return coord, tables
+
+
+def run_query(coord: Coordinator, name: str, ntasks=None, **plan_kw
+              ) -> QueryResult:
+    plan = QUERIES[name](ntasks, **plan_kw) if name == "q12" \
+        else QUERIES[name](ntasks)
+    return coord.run_query(plan)
+
+
+# ---------------------------------------------------------------------------
+# single-threaded oracle (independent execution path)
+# ---------------------------------------------------------------------------
+
+def oracle(name: str, tables: dict[str, Table]) -> Table:
+    plan = QUERIES[name]()
+    produced: dict[str, Table] = {}
+
+    def small(tname):
+        return tables[tname]
+
+    for st in plan["stages"]:
+        if st["kind"] == "scan":
+            t = tables[st["table"]].project(st["columns"]) \
+                if st.get("columns") else tables[st["table"]]
+            t = _ops(t, st.get("ops", []), small)
+        elif st["kind"] == "join":
+            left = produced[st["left"]]
+            right = produced[st["right"]]
+            t = OPS.op_join(left, right, st["lkey"], st["rkey"])
+            t = _ops(t, st.get("ops", []), small)
+        elif st["kind"] == "final_agg":
+            t = OPS.merge_partials([produced[st["deps"][0]]],
+                                   st.get("keys", []),
+                                   [tuple(a) for a in st.get("aggs", [])])
+            if st.get("sort"):
+                t = OPS.op_sort_limit(t, [tuple(s) for s in st["sort"]],
+                                      st.get("limit"))
+        else:
+            raise ValueError(st["kind"])
+        produced[st["name"]] = t
+    return produced[plan["stages"][-1]["name"]]
+
+
+def _ops(t, ops, small):
+    from repro.core.worker import _apply_ops
+    return _apply_ops(t, ops, small)

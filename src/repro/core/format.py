@@ -1,0 +1,97 @@
+"""Partitioned S3 object format (paper §3.2, Fig 2).
+
+One producer writes ONE object holding ALL its output partitions:
+
+    [magic u64][n_partitions u64][dict_len u64]
+    [partition END offsets u64 x n]          <- the metadata "header"
+    [dictionary section (optional)]
+    [partition 0 bytes][partition 1 bytes]...
+
+A consumer fetches any partition — or any contiguous RUN of partitions —
+with exactly TWO range GETs: one for the fixed-size header (+dictionary),
+one for the byte range. That property is what makes the multi-stage shuffle
+(§4.2) work: combiners read contiguous partition runs at the same 2-reads
+cost.
+
+Dictionary encoding (§3.2): low-cardinality string columns are encoded as
+u32 codes; the dictionary lives in the header section so every partition
+can be decoded after the two reads.
+"""
+from __future__ import annotations
+
+import struct
+
+MAGIC = 0x57A121A6_00000001
+_U64 = struct.Struct("<Q")
+
+
+def header_size(n_partitions: int) -> int:
+    return 24 + 8 * n_partitions
+
+
+def write_partitioned(partitions: list[bytes],
+                      dictionary: bytes = b"") -> bytes:
+    """Serialize partitions into the single-object format."""
+    n = len(partitions)
+    out = bytearray()
+    out += _U64.pack(MAGIC)
+    out += _U64.pack(n)
+    out += _U64.pack(len(dictionary))
+    pos = 0
+    ends = []
+    for p in partitions:
+        pos += len(p)
+        ends.append(pos)
+    for e in ends:
+        out += _U64.pack(e)
+    out += dictionary
+    for p in partitions:
+        out += p
+    return bytes(out)
+
+
+def parse_header(header: bytes, n_partitions: int
+                 ) -> tuple[list[int], int, int]:
+    """-> (end offsets, dict_len, data_start). header = first
+    header_size(n)+dict bytes; pass at least header_size(n) bytes."""
+    magic, n, dict_len = struct.unpack_from("<QQQ", header, 0)
+    assert magic == MAGIC, "bad partitioned-object magic"
+    assert n == n_partitions, (n, n_partitions)
+    ends = list(struct.unpack_from(f"<{n}Q", header, 24))
+    data_start = header_size(n) + dict_len
+    return ends, dict_len, data_start
+
+
+def partition_range(ends: list[int], data_start: int, first: int,
+                    last: int | None = None) -> tuple[int, int]:
+    """Byte range [start, end) of partitions [first, last] (inclusive).
+    Contiguous runs cost the same two GETs as a single partition."""
+    last = first if last is None else last
+    start = data_start + (ends[first - 1] if first > 0 else 0)
+    end = data_start + ends[last]
+    return start, end
+
+
+# ---------------------------------------------------------------------------
+# dictionary encoding for low-cardinality string columns (§3.2)
+# ---------------------------------------------------------------------------
+
+def encode_dictionary(values: list[bytes]) -> bytes:
+    out = bytearray()
+    out += _U64.pack(len(values))
+    for v in values:
+        out += _U64.pack(len(v))
+        out += v
+    return bytes(out)
+
+
+def decode_dictionary(data: bytes) -> list[bytes]:
+    (n,) = _U64.unpack_from(data, 0)
+    pos = 8
+    vals = []
+    for _ in range(n):
+        (ln,) = _U64.unpack_from(data, pos)
+        pos += 8
+        vals.append(bytes(data[pos:pos + ln]))
+        pos += ln
+    return vals

@@ -1,0 +1,52 @@
+"""Physical query plans (paper §2.3/§4: the coordinator's input is a JSON
+physical plan — Starling has no optimizer).
+
+Plan schema (JSON-able dict):
+  {"name": str, "stages": [stage, ...]}
+stage:
+  {"name": str, "kind": "scan"|"join"|"combine"|"final_agg",
+   "tasks": int (0 = one per input object),
+   "deps": [stage names],
+   scan:  "table", "columns", "ops"
+   join:  "left"/"right" (stage names), "lkey"/"rkey", "ops",
+          "shuffle": {"strategy": "single"|"multi", "p":..., "f":...}
+   final_agg: "keys", "aggs", "sort", "limit"
+   any stage may have "partition": {"key": col} -> writes the §3.2
+   partitioned object format with the consuming stage's task count.}
+
+Task naming: q/<query>/<stage>/t<i>; doublewrite twin appends ".dw".
+"""
+from __future__ import annotations
+
+import json
+
+
+def load_plan(text: str) -> dict:
+    plan = json.loads(text)
+    validate_plan(plan)
+    return plan
+
+
+def dump_plan(plan: dict) -> str:
+    return json.dumps(plan, indent=1)
+
+
+def validate_plan(plan: dict):
+    names = set()
+    for st in plan["stages"]:
+        assert st["name"] not in names, f"duplicate stage {st['name']}"
+        for d in st["deps"]:
+            assert d in names, f"stage {st['name']} dep {d} not defined yet"
+        names.add(st["name"])
+        assert st["kind"] in ("scan", "join", "combine", "final_agg"), st
+
+
+def stage_by_name(plan: dict, name: str) -> dict:
+    for st in plan["stages"]:
+        if st["name"] == name:
+            return st
+    raise KeyError(name)
+
+
+def out_key(query: str, stage: str, task: int) -> str:
+    return f"q/{query}/{stage}/t{task}"

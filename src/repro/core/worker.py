@@ -1,0 +1,199 @@
+"""Stateless worker (paper §2.3): one task per (simulated) invocation.
+
+A worker receives ONLY its task parameters, reads inputs from the object
+store (base table splits or §3.2 partitioned intermediates), executes its
+compiled operator pipeline, writes its output object(s), and exits. No
+worker-to-worker communication exists — the store is the only medium.
+
+Timing is virtual (objectstore.client): real bytes move, latencies are
+sampled; compute time is measured wall-clock x ``compute_scale``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import format as FMT
+from repro.core.plan import out_key
+from repro.core.stragglers import StragglerConfig
+from repro.objectstore.client import ReadReq, StoreClient
+from repro.objectstore.store import ObjectStore
+from repro.relational import ops as OPS
+from repro.relational.table import Table, deserialize_table, serialize_table
+
+
+@dataclasses.dataclass
+class PartInput:
+    """One partitioned-object input: read partitions [first, last]."""
+    key: str
+    avail: float
+    n_parts: int
+    first: int
+    last: int
+
+
+@dataclasses.dataclass
+class TaskResult:
+    key: str | None              # output object (None for inline results)
+    virtual_end: float
+    gets: int
+    puts: int
+    compute_s: float
+    out_bytes: int
+    result: object = None        # final stage only
+
+
+def _apply_ops(t: Table, ops: list, base_reader) -> Table:
+    for op in ops:
+        kind = op["op"]
+        if kind == "filter":
+            t = OPS.op_filter(t, op["pred"])
+        elif kind == "project":
+            t = OPS.op_project(t, op["columns"])
+        elif kind == "compute":
+            t = OPS.op_compute(t, op["name"], op["expr"])
+        elif kind == "partial_agg":
+            t = OPS.op_aggregate(t, op["keys"],
+                                 [tuple(a) for a in op["aggs"]])
+        elif kind == "broadcast_join":
+            small = base_reader(op["table"])
+            t = OPS.op_join(t, small, op["lkey"], op["rkey"])
+        else:
+            raise ValueError(kind)
+    return t
+
+
+class Worker:
+    """Executes one task; all timing is virtual seconds from `now`."""
+
+    def __init__(self, store: ObjectStore, policy: StragglerConfig,
+                 rng: np.random.Generator, compute_scale: float = 1.0):
+        self.store = store
+        self.policy = policy
+        self.client = StoreClient(store, policy, rng)
+        self.compute_scale = compute_scale
+        self.rng = rng
+
+    # ------------------------------------------------------------------ I/O
+    def _alt(self, key: str):
+        return key + ".dw" if self.policy.doublewrite else None
+
+    def _read_whole(self, keys_avail: list[tuple[str, float]], now: float):
+        reqs = [ReadReq(k, available_at=a, alt_key=self._alt(k))
+                for k, a in keys_avail]
+        return self.client.read_many(reqs, now)
+
+    def _read_partitions(self, inputs: list[PartInput], now: float,
+                         columns=None):
+        """Two range-GETs per input object (§3.2): header, partition run.
+
+        Returns (per-input list of per-partition Tables, virtual end).
+        """
+        hdr_reqs = [ReadReq(pi.key, 0, FMT.header_size(pi.n_parts),
+                            available_at=pi.avail, alt_key=self._alt(pi.key))
+                    for pi in inputs]
+        headers, t1 = self.client.read_many(hdr_reqs, now)
+        body_reqs = []
+        metas = []
+        for pi, hdr in zip(inputs, headers):
+            ends, dict_len, data_start = FMT.parse_header(hdr, pi.n_parts)
+            lo, hi = FMT.partition_range(ends, data_start, pi.first, pi.last)
+            metas.append((ends, data_start))
+            body_reqs.append(ReadReq(pi.key, lo, hi, available_at=pi.avail,
+                                     alt_key=self._alt(pi.key)))
+        bodies, t2 = self.client.read_many(body_reqs, t1)
+        out: list[list[Table]] = []
+        for pi, (ends, data_start), body, req in zip(inputs, metas, bodies,
+                                                     body_reqs):
+            base = req.start
+            tabs = []
+            for j in range(pi.first, pi.last + 1):
+                lo = data_start + (ends[j - 1] if j > 0 else 0) - base
+                hi = data_start + ends[j] - base
+                tabs.append(deserialize_table(body[lo:hi], columns)
+                            if hi > lo else Table({}))
+            out.append(tabs)
+        return out, t2
+
+    # ------------------------------------------------------------ execution
+    def run_scan(self, query: str, st: dict, task_id: int, split_key: str,
+                 avail: float, now: float, n_out_parts: int,
+                 base_reader) -> TaskResult:
+        datas, t_in = self._read_whole([(split_key, avail)], now)
+        c0 = time.perf_counter()
+        t = deserialize_table(datas[0], st.get("columns"))
+        t = _apply_ops(t, st.get("ops", []), base_reader)
+        comp = (time.perf_counter() - c0) * self.compute_scale
+        return self._emit(query, st, task_id, t, t_in + comp, comp,
+                          n_out_parts)
+
+    def run_join(self, query: str, st: dict, task_id: int,
+                 left_inputs: list[PartInput], right_inputs: list[PartInput],
+                 now: float, n_out_parts: int, base_reader) -> TaskResult:
+        """Partitioned hash join on this task's partition of both sides."""
+        lt, t1 = self._read_partitions(left_inputs, now)
+        rt, t2 = self._read_partitions(right_inputs, t1)
+        c0 = time.perf_counter()
+        left = Table.concat([t for tabs in lt for t in tabs])
+        right = Table.concat([t for tabs in rt for t in tabs])
+        if len(left) and len(right):
+            t = OPS.op_join(left, right, st["lkey"], st["rkey"])
+            t = _apply_ops(t, st.get("ops", []), base_reader)
+        else:
+            t = Table({})
+        comp = (time.perf_counter() - c0) * self.compute_scale
+        return self._emit(query, st, task_id, t, t2 + comp, comp,
+                          n_out_parts)
+
+    def run_combine(self, query: str, st: dict, task_id: int,
+                    inputs: list[PartInput], now: float) -> TaskResult:
+        """Multi-stage shuffle combiner (§4.2): merge a contiguous partition
+        run from a subset of files into one combined partitioned object."""
+        per_file, t_in = self._read_partitions(inputs, now)
+        first, last = inputs[0].first, inputs[0].last
+        c0 = time.perf_counter()
+        parts = []
+        for off in range(last - first + 1):
+            merged = Table.concat([tabs[off] for tabs in per_file])
+            parts.append(serialize_table(merged))
+        comp = (time.perf_counter() - c0) * self.compute_scale
+        payload = FMT.write_partitioned(parts)
+        key = out_key(query, st["name"], task_id)
+        t_out = self.client.write(key, payload, t_in + comp)
+        return TaskResult(key, t_out, self.client.gets, self.client.puts,
+                          comp, len(payload))
+
+    def run_final(self, query: str, st: dict,
+                  inputs: list[tuple[str, float]], now: float) -> TaskResult:
+        datas, t_in = self._read_whole(inputs, now)
+        c0 = time.perf_counter()
+        parts = [deserialize_table(d) for d in datas if len(d) > 8]
+        t = OPS.merge_partials([p for p in parts if len(p)],
+                               st.get("keys", []),
+                               [tuple(a) for a in st.get("aggs", [])])
+        if st.get("sort") and len(t):
+            t = OPS.op_sort_limit(t, [tuple(s) for s in st["sort"]],
+                                  st.get("limit"))
+        comp = (time.perf_counter() - c0) * self.compute_scale
+        key = out_key(query, st["name"], 0)
+        payload = serialize_table(t)
+        t_out = self.client.write(key, payload, t_in + comp)
+        return TaskResult(key, t_out, self.client.gets, self.client.puts,
+                          comp, len(payload), result=t)
+
+    # ------------------------------------------------------------- output
+    def _emit(self, query, st, task_id, t: Table, now, comp,
+              n_out_parts: int) -> TaskResult:
+        key = out_key(query, st["name"], task_id)
+        if st.get("partition") and n_out_parts > 1:
+            parts = OPS.op_partition(t, st["partition"]["key"], n_out_parts) \
+                if len(t) else [Table({})] * n_out_parts
+            payload = FMT.write_partitioned(
+                [serialize_table(p) for p in parts])
+        else:
+            payload = serialize_table(t)
+        t_out = self.client.write(key, payload, now)
+        return TaskResult(key, t_out, self.client.gets, self.client.puts,
+                          comp, len(payload))

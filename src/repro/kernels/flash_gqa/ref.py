@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash_gqa: plain materialized causal attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,Sq,H,D], k/v [B,Skv,H,D]; full score materialization (oracle)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m &= kpos <= qpos + (Skv - Sq)        # q offset when Skv > Sq
+    if window > 0:
+        m &= kpos > qpos + (Skv - Sq) - window
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for partition_pack.
+
+The Starling §3.2 partitioned-object layout as a tensor op: given rows and
+their destination partition ids, produce
+  * a partition-major packed buffer [n_parts, capacity, d] (slot `capacity`
+    per partition is the overflow/drop row — bounded buffers, like the
+    paper's capacity-bounded workers),
+  * the per-partition counts ("offsets header"),
+  * the (row -> (partition, slot)) mapping used by unpack/combine.
+
+This is exactly the MoE dispatch of models/moe.py and the hash-partition of
+relational/ops.py in one primitive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_indices(part_ids: jax.Array, n_parts: int, capacity: int):
+    """part_ids [T] int32 -> (slot [T], counts [n_parts], keep [T]).
+
+    slot is the position within the destination partition (stable order);
+    entries past `capacity` are dropped (keep=False).
+    """
+    T = part_ids.shape[0]
+    sort_idx = jnp.argsort(part_ids)                       # stable
+    sorted_p = part_ids[sort_idx]
+    counts = jax.ops.segment_sum(jnp.ones((T,), jnp.int32), part_ids,
+                                 num_segments=n_parts)
+    offsets = jnp.cumsum(counts) - counts
+    pos_in_p = jnp.arange(T, dtype=jnp.int32) - offsets[sorted_p]
+    # invert the sort: slot for original row i
+    slot = jnp.zeros((T,), jnp.int32).at[sort_idx].set(pos_in_p)
+    keep = slot < capacity
+    return slot, counts, keep
+
+
+def pack(rows: jax.Array, part_ids: jax.Array, n_parts: int,
+         capacity: int):
+    """rows [T, d] -> (buf [n_parts, capacity, d], counts, slot, keep)."""
+    T, d = rows.shape
+    slot, counts, keep = pack_indices(part_ids, n_parts, capacity)
+    p_idx = jnp.where(keep, part_ids, part_ids)            # same partition
+    s_idx = jnp.where(keep, slot, capacity)                # overflow slot
+    buf = jnp.zeros((n_parts, capacity + 1, d), rows.dtype)
+    buf = buf.at[p_idx, s_idx].set(rows)
+    return buf[:, :capacity], counts, slot, keep
+
+
+def unpack(buf: jax.Array, part_ids: jax.Array, slot: jax.Array,
+           keep: jax.Array):
+    """Inverse range-read: row i <- buf[part_ids[i], slot[i]] (0 if dropped)."""
+    padded = jnp.pad(buf, ((0, 0), (0, 1), (0, 0)))
+    s_idx = jnp.where(keep, slot, buf.shape[1])
+    out = padded[part_ids, s_idx]
+    return out * keep[:, None].astype(out.dtype)

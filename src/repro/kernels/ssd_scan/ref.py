@@ -1,0 +1,33 @@
+"""Oracle for ssd_scan = the model's chunked SSD (models/mamba2.py),
+which itself matches the sequential recurrence (tested here too)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked  # noqa: F401 (re-export)
+
+
+def ssd_sequential(x, dt, A, Bm, Cm):
+    """Token-by-token reference recurrence (the literal SSM definition)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                  # [B,H,P], [B,H], [B,G,N] x2
+        bt = jnp.repeat(bt, rep, axis=1)
+        ct = jnp.repeat(ct, rep, axis=1)
+        dA = jnp.exp(dtt * A[None])            # [B,H]
+        state = (state * dA[..., None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt))
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), state

@@ -1,0 +1,70 @@
+"""Per-op breakdown of the roofline terms from a saved HLO artifact:
+which collectives / memory ops contribute most (bytes x loop multiplier).
+Drives the §Perf hypothesis loop."""
+from __future__ import annotations
+
+import re
+import sys
+
+from repro.launch.hlo_analysis import (_collective_bytes, _instr_bytes,
+                                       _multipliers, _shape_elems_bytes,
+                                       COLLECTIVES, _FREE_OPS, parse_hlo)
+
+
+def collective_breakdown(text: str, n_devices: int, top: int = 15):
+    comps = parse_hlo(text)
+    mult = _multipliers(comps)
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__" or mult.get(cname, 0.0) == 0.0:
+            continue
+        m = mult[cname]
+        for ins in comp.instrs:
+            if any(ins.opcode.startswith(k) for k in COLLECTIVES) \
+                    and not ins.opcode.endswith("-done"):
+                kind, vol = _collective_bytes(ins, n_devices)
+                meta = re.search(r'op_name="([^"]*)"', ins.line)
+                rows.append((m * vol, m, kind, ins.type_str[:60],
+                             (meta.group(1) if meta else "?")[-80:]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def memory_breakdown(text: str, top: int = 15):
+    comps = parse_hlo(text)
+    mult = _multipliers(comps)
+    absorbed = set()
+    from repro.launch.hlo_analysis import _CALLED_RE
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode in ("fusion", "reduce", "reduce-window", "scatter",
+                              "sort", "map", "select-and-scatter",
+                              "all-reduce", "reduce-scatter"):
+                for cn in _CALLED_RE.findall(ins.line):
+                    absorbed.add(cn)
+    rows = []
+    for cname, comp in comps.items():
+        if cname == "__entry__" or cname in absorbed \
+                or mult.get(cname, 0.0) == 0.0:
+            continue
+        m = mult[cname]
+        for ins in comp.instrs:
+            if ins.opcode in _FREE_OPS or ins.opcode.endswith("-done"):
+                continue
+            b = _instr_bytes(ins, comp)
+            if b * m > 1e8:
+                meta = re.search(r'op_name="([^"]*)"', ins.line)
+                rows.append((m * b, m, ins.opcode, ins.type_str[:60],
+                             (meta.group(1) if meta else "?")[-80:]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+if __name__ == "__main__":
+    path, devices = sys.argv[1], int(sys.argv[2])
+    kind = sys.argv[3] if len(sys.argv) > 3 else "coll"
+    text = open(path).read()
+    rows = collective_breakdown(text, devices) if kind == "coll" \
+        else memory_breakdown(text)
+    for tot, m, k, t, op in rows:
+        print(f"{tot/1e9:8.2f}GB x{m:<6.0f} {k:14s} {t:58s} {op}")

@@ -1,0 +1,299 @@
+"""Static analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts while-loop bodies
+ONCE, so every scanned-layer model (and every lax.map attention chunk loop)
+is undercounted by the trip count. This module re-derives per-device
+  * matmul FLOPs   (dot ops, x2 multiply-add)
+  * collective traffic (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute), ring-model per-device bytes
+with correct loop multipliers, by walking the computation call graph
+(while bodies x known_trip_count, fusions, calls, conditionals).
+
+Validated against unrolled references in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4"
+    r"|pred|c64|c128)\[([0-9,]*)\]")
+
+# instruction definition: "%name = <type> opcode(...)" (ENTRY root may lack %)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[\w\[\]{},/ ]+?))\s+"
+    r"([\w\-]+)\(", re.M)
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*[^{]*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{[^=]*?\}\}|\[\d+,\d+\]<=\[[0-9,]+\])")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:, )?)+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _dims(dims_str: str) -> list[int]:
+    return [int(d) for d in dims_str.split(",") if d] if dims_str else []
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """Total elements and bytes over all array shapes in a type string."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    shapes: dict       # instr name -> type string
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    # strip /*index=N*/ comments: the '=' inside breaks instruction parsing
+    text = re.sub(r"/\*[^*]*\*/", "", text)
+    for line in text.splitlines():
+        h = _COMP_HDR_RE.match(line)
+        if h:
+            cur = Computation(h.group(1), [], {})
+            comps[h.group(1)] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry_name = h.group(1)
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+            cur.instrs.append(Instr(name, type_str, opcode, line))
+            cur.shapes[name] = type_str
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Total execution multiplier per computation, from ENTRY."""
+    mult: dict[str, float] = defaultdict(float)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return mult
+
+    import sys
+    sys.setrecursionlimit(10000)
+
+    def visit(comp: Computation, m: float):
+        mult[comp.name] += m
+        for ins in comp.instrs:
+            if ins.opcode in ("while",):
+                trip = 1
+                t = _TRIP_RE.search(ins.line)
+                if t:
+                    trip = int(t.group(1))
+                for cn in _CALLED_RE.findall(ins.line):
+                    if cn in comps:
+                        child_m = m * (trip if "body=" in ins.line and
+                                       f"body=%{cn}" in ins.line or
+                                       f"body={cn}" in ins.line else 1)
+                        visit(comps[cn], child_m)
+            elif ins.opcode in ("fusion", "call", "map", "reduce",
+                                "reduce-window", "scatter", "sort",
+                                "select-and-scatter", "all-reduce",
+                                "reduce-scatter", "custom-call"):
+                for cn in _CALLED_RE.findall(ins.line):
+                    if cn in comps:
+                        visit(comps[cn], m)
+            elif ins.opcode == "conditional":
+                b = _COND_BRANCHES_RE.search(ins.line)
+                if b:
+                    for cn in b.group(1).replace("%", "").split(","):
+                        cn = cn.strip()
+                        if cn in comps:
+                            visit(comps[cn], m)
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.type_str)
+    lc = _LHS_CONTRACT_RE.search(ins.line)
+    contract = 1
+    if lc:
+        ops = _OPERANDS_RE.search(ins.line)
+        if ops:
+            lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
+            lhs_type = comp.shapes.get(lhs_name)
+            if lhs_type:
+                m = _SHAPE_RE.search(lhs_type)
+                if m:
+                    d = _dims(m.group(2))
+                    for idx in _dims(lc.group(1)):
+                        if idx < len(d):
+                            contract *= d[idx]
+    return 2.0 * out_elems * contract
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(1, first.count(",") + 1)
+    m2 = re.match(r"\[(\d+),(\d+)\]", g)
+    if m2:
+        return int(m2.group(2))
+    return default
+
+
+def _collective_bytes(ins: Instr, n_devices: int) -> tuple[str, float]:
+    """(kind, modeled per-device ring bytes) for one collective instr."""
+    kind = next(k for k in COLLECTIVES if ins.opcode.startswith(k))
+    g = _group_size(ins.line, n_devices)
+    frac = (g - 1) / g if g > 1 else 0.0
+    if kind in ("all-gather", "all-reduce"):
+        # use OUTPUT size: for all-gather output = gathered; for all-reduce
+        # in-place size; ring volume below.
+        _, size = _shape_elems_bytes(ins.type_str)
+        if kind == "all-gather":
+            return kind, size * frac
+        return kind, 2 * size * frac
+    # reduce-scatter / all-to-all / permute: operand == output order of size
+    _, size = _shape_elems_bytes(ins.type_str)
+    if kind == "collective-permute":
+        return kind, size
+    if kind == "reduce-scatter":
+        return kind, size * frac * 1.0
+    return kind, size * frac                                  # all-to-all
+
+
+# ops that move no data (metadata / aliasing only)
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "while", "conditional", "after-all", "add-dependency",
+             "partition-id", "replica-id", "iota", "rng-bit-generator",
+             "opt-barrier"}
+
+
+def _operand_names(line: str) -> list[str]:
+    m = _OPERANDS_RE.search(line)
+    if not m:
+        return []
+    return [x.strip().lstrip("%") for x in m.group(1).split(",")]
+
+
+def _instr_bytes(ins: Instr, comp: Computation) -> float:
+    """Approximate HBM traffic of one instruction (operands + output).
+
+    dynamic-update-slice is modeled in-place (slice bytes x2, not the whole
+    buffer — the decode-path KV-cache write); dynamic-slice reads/writes the
+    slice only.
+    """
+    _, out_b = _shape_elems_bytes(ins.type_str)
+    if ins.opcode == "dynamic-update-slice":
+        ops = _operand_names(ins.line)
+        upd_b = 0
+        if len(ops) >= 2:
+            t = comp.shapes.get(ops[1])
+            if t:
+                _, upd_b = _shape_elems_bytes(t)
+        return 2.0 * upd_b
+    if ins.opcode == "dynamic-slice":
+        return 2.0 * out_b
+    total = float(out_b)
+    for name in _operand_names(ins.line):
+        t = comp.shapes.get(name)
+        if t:
+            _, b = _shape_elems_bytes(t)
+            total += b
+    return total
+
+
+def analyze(text: str, n_devices: int) -> dict:
+    comps = parse_hlo(text)
+    mult = _multipliers(comps)
+
+    # computations whose traffic is accounted by their caller (fusion bodies
+    # and tiny applied lambdas)
+    absorbed: set[str] = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode in ("fusion", "reduce", "reduce-window", "scatter",
+                              "sort", "map", "select-and-scatter",
+                              "all-reduce", "reduce-scatter"):
+                for cn in _CALLED_RE.findall(ins.line):
+                    absorbed.add(cn)
+
+    flops = 0.0
+    mem_bytes = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_count: dict[str, int] = defaultdict(int)
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "dot-general"):
+                flops += m * _dot_flops(ins, comp)
+            elif any(ins.opcode.startswith(k) for k in COLLECTIVES):
+                if ins.opcode.endswith("-done"):
+                    continue
+                kind, vol = _collective_bytes(ins, n_devices)
+                coll_bytes[kind] += m * vol
+                coll_count[kind] += int(m) if m >= 1 else 1
+            if cname not in absorbed and ins.opcode not in _FREE_OPS \
+                    and not ins.opcode.endswith("-done"):
+                mem_bytes += m * _instr_bytes(ins, comp)
+    # CPU-backend artifact: XLA CPU upcasts bf16 collectives to f32 and keeps
+    # weight-grad all-reduces un-scattered. Count the f32 AR/AG buffer bytes;
+    # on TPU these run in bf16 (0.5x) and weight grads reduce-scatter to the
+    # shard (1/N). We report peak both raw and with the 0.5x dtype correction
+    # (the conservative half of the two effects).
+    f32_coll_buffer_bytes = 0
+    for cname, comp in comps.items():
+        if cname == "__entry__" or mult.get(cname, 0.0) == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode.startswith(("all-reduce", "all-gather")) \
+                    and not ins.opcode.endswith("-done"):
+                if "f32[" in ins.type_str and "bf16[" not in ins.type_str:
+                    _, b = _shape_elems_bytes(ins.type_str)
+                    f32_coll_buffer_bytes = max(f32_coll_buffer_bytes, b)
+    return {"flops": flops,
+            "memory_bytes": mem_bytes,
+            "collective_bytes_by_kind": dict(coll_bytes),
+            "collective_count_by_kind": dict(coll_count),
+            "collective_total_bytes": sum(coll_bytes.values()),
+            "f32_collective_peak_buffer_bytes": f32_coll_buffer_bytes}

@@ -1,0 +1,30 @@
+"""Production mesh factory.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to get 512 placeholder devices; smoke tests and benches see 1.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_by_name(name: str) -> jax.sharding.Mesh:
+    if name in ("single", "single_pod", "16x16"):
+        return make_production_mesh(multi_pod=False)
+    if name in ("multi", "multi_pod", "2x16x16"):
+        return make_production_mesh(multi_pod=True)
+    raise ValueError(f"unknown mesh {name!r}")
+
+
+def mesh_chips(mesh: jax.sharding.Mesh) -> int:
+    return int(mesh.devices.size)

@@ -1,0 +1,75 @@
+"""Serving driver: prefill a batch of prompts, then batched decode.
+
+CPU-scale usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
+      --prompt-len 16 --new-tokens 8 --batch 2
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.configs.smoke import smoke_config
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models.model import build_model
+from repro.models.modules import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    bundle = build_model(cfg)
+    params = init_params(bundle.param_defs, jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    from repro.configs.base import ShapeConfig
+    shape = ShapeConfig("serve", args.prompt_len, args.batch, "prefill")
+    batch = init_params(bundle.batch_defs(shape), jax.random.key(1))
+    if "tokens" in batch:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size,
+                         (args.batch, args.prompt_len)), jnp.int32)
+    if "frames" in batch:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=batch["frames"].shape), cfg.compute_dtype)
+
+    prefill = jax.jit(make_prefill_step(bundle))
+    decode = jax.jit(make_decode_step(bundle))
+    logits, _ = prefill(params, batch)
+    # fresh cache sized for the full generation (prefill replayed into it)
+    cache = init_params(
+        bundle.cache_defs(args.batch, args.prompt_len + args.new_tokens),
+        jax.random.key(2))
+    dec_batch = {"token": batch["tokens"][:, :1] if "tokens" in batch
+                 else jnp.zeros((args.batch, 1), jnp.int32)}
+    if "frames" in batch:
+        dec_batch["frames"] = batch["frames"]
+    # replay prompt tokens through the decode path, then sample greedily
+    toks = []
+    for t in range(args.prompt_len + args.new_tokens - 1):
+        if "tokens" in batch and t < args.prompt_len:
+            dec_batch["token"] = batch["tokens"][:, t:t + 1]
+        lg, cache = decode(params, cache, dec_batch)
+        nxt = jnp.argmax(lg[:, 0, :], axis=-1).astype(jnp.int32)[:, None]
+        if t >= args.prompt_len - 1:
+            toks.append(np.asarray(nxt[:, 0]))
+            dec_batch["token"] = nxt
+    gen = np.stack(toks, 1) if toks else np.zeros((args.batch, 0), np.int32)
+    print(f"{cfg.name}: generated {gen.shape[1]} tokens/seq")
+    for b in range(args.batch):
+        print(f"  seq{b}: {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Step builders: train / prefill / decode over a ModelBundle.
+
+``make_train_step`` returns (step_fn, state_defs); state is a dict
+{params, opt, step} whose defs are ParamSpec trees so sharding and abstract
+lowering reuse the same machinery as parameters.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelBundle
+from repro.models.modules import ParamSpec, init_params
+from repro.runtime.optimizer import Optimizer, make_optimizer
+
+
+def train_state_defs(bundle: ModelBundle, opt: Optimizer) -> dict:
+    return {"params": bundle.param_defs,
+            "opt": opt.state_defs(bundle.param_defs),
+            "step": ParamSpec((), (), "zeros", jnp.int32)}
+
+
+def init_train_state(bundle: ModelBundle, opt: Optimizer, key) -> dict:
+    params = init_params(bundle.param_defs, key)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(bundle: ModelBundle, opt: Optimizer | None = None):
+    opt = opt or make_optimizer(bundle.cfg.optimizer)
+    n_mb = max(bundle.cfg.grad_accum, 1)
+
+    def grads_of(params, batch):
+        def lf(p):
+            return bundle.loss_fn(p, batch)
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(state: dict, batch: dict):
+        if n_mb == 1:
+            grads, metrics = grads_of(state["params"], batch)
+        else:
+            # gradient accumulation: scan microbatches (activation-sized
+            # buffers shrink by n_mb; grads accumulate in param dtype)
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((n_mb, b // n_mb) + x.shape[1:]) \
+                    if x.ndim and b % n_mb == 0 else \
+                    jnp.broadcast_to(x, (n_mb,) + x.shape)
+            mbs = {k: (split(v) if k != "mrope_positions" else
+                       jnp.moveaxis(split(jnp.moveaxis(v, 0, 1)), 1, 2))
+                   for k, v in batch.items()}
+
+            def body(acc, mb):
+                g, m = grads_of(state["params"], mb)
+                return jax.tree.map(jnp.add, acc, g), m
+            zero = jax.tree.map(jnp.zeros_like, state["params"])
+            grads, metrics = jax.lax.scan(body, zero, mbs)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+        new_p, new_opt = opt.update(grads, state["opt"], state["params"],
+                                    state["step"])
+        new_state = {"params": new_p, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step, train_state_defs(bundle, opt)
+
+
+def make_prefill_step(bundle: ModelBundle):
+    def prefill_step(params, batch):
+        return bundle.prefill_fn(params, batch)
+    return prefill_step
+
+
+def make_decode_step(bundle: ModelBundle):
+    def decode_step(params, cache, batch):
+        return bundle.decode_fn(params, cache, batch)
+    return decode_step

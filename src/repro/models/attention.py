@@ -1,0 +1,242 @@
+"""Attention flavors for the model zoo.
+
+All variants are pure jnp (the CPU/dry-run path). ``kernels/flash_gqa``
+provides the Pallas TPU kernel for the same math; ``ops.py`` there dispatches
+on ``config.use_pallas``.
+
+Prefill/train use *chunked online-softmax* attention (lax.map over query
+chunks against full K with masking) so the [S, S] score matrix is never
+materialized — memory O(chunk x S) per step. The causal upper triangle is
+still computed-and-masked in this baseline; the `block_tri` implementation
+(perf iteration, see EXPERIMENTS.md §Perf) skips it.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def _inv_freq(rot_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x [B,S,H,D], positions [B,S] -> rotated x (first fraction*D dims)."""
+    D = x.shape[-1]
+    rot = int(D * fraction)
+    rot -= rot % 2
+    if rot == 0 or theta <= 0:
+        return x
+    inv = _inv_freq(rot, theta)                                   # [rot/2]
+    ang = positions.astype(jnp.float32)[..., None] * inv          # [B,S,rot/2]
+    cos = jnp.cos(ang)[:, :, None, :]                             # [B,S,1,rot/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.concatenate([cos, cos], axis=-1).astype(x.dtype)
+    sin = jnp.concatenate([sin, sin], axis=-1).astype(x.dtype)
+    xr, xp = x[..., :rot], x[..., rot:]
+    xr = xr * cos + _rotate_half(xr) * sin
+    return jnp.concatenate([xr, xp], axis=-1) if rot < D else xr
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions [3,B,S] (t/h/w), sections sum to D/2."""
+    D = x.shape[-1]
+    inv = _inv_freq(D, theta)                                     # [D/2]
+    assert sum(sections) == D // 2, (sections, D)
+    # section id for each frequency index
+    sec_ids = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)])
+    pos = positions.astype(jnp.float32)                           # [3,B,S]
+    # per-freq position: pick t/h/w stream per section  -> [B,S,D/2]
+    pos_sel = jnp.take(pos, sec_ids, axis=0)                      # [D/2,B,S]
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)                        # [B,S,D/2]
+    ang = pos_sel * inv
+    cos = jnp.concatenate([jnp.cos(ang), jnp.cos(ang)], -1)[:, :, None, :].astype(x.dtype)
+    sin = jnp.concatenate([jnp.sin(ang), jnp.sin(ang)], -1)[:, :, None, :].astype(x.dtype)
+    return x * cos + _rotate_half(x) * sin
+
+
+# ---------------------------------------------------------------------------
+# Core attention
+# ---------------------------------------------------------------------------
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B,S,Hkv,D] -> [B,S,Hkv*n_rep,D]; q head h uses kv head h // n_rep."""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      chunk: int = 1024, q_offset=0,
+                      kv_valid_len=None) -> jax.Array:
+    """Memory-bounded attention: lax.map over query chunks.
+
+    q [B,Sq,H,D], k/v [B,Skv,H,D(v)] (kv already head-repeated).
+    window > 0 limits attention to the last `window` positions (inclusive of
+    self). q_offset: global position of q[0] relative to k[0].
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = (Sq + pad) // chunk
+    qc = q.reshape(B, n, chunk, H, D)
+    kpos = jnp.arange(Skv)
+
+    @jax.checkpoint
+    def one_chunk(args):
+        # checkpointed: backward recomputes scores/probs per chunk instead of
+        # stacking [n_chunks, B, H, chunk, Skv] residuals (flash-style bwd)
+        qi, idx = args                                   # [B,chunk,H,D], scalar
+        qpos = q_offset + idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        m = jnp.ones((chunk, Skv), dtype=bool)
+        if causal:
+            m &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            m &= kpos[None, :] > qpos[:, None] - window
+        if kv_valid_len is not None:
+            m = m[None] & (kpos[None, None, :] < kv_valid_len[:, None, None])
+            s = jnp.where(m[:, None], s, NEG_INF)
+        else:
+            s = jnp.where(m[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+    out = jax.lax.map(one_chunk, (jnp.moveaxis(qc, 1, 0), jnp.arange(n)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq + pad, H, v.shape[-1])
+    return out[:, :Sq] if pad else out
+
+
+def block_tri_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        window: int = 0, chunk: int = 1024,
+                        q_offset=0) -> jax.Array:
+    """Causal attention that only computes lower-triangular chunk pairs.
+
+    Perf-optimized variant (EXPERIMENTS.md §Perf): scans kv-chunks as the
+    outer loop and q-chunks >= kv-chunk inner via an online-softmax
+    accumulator, halving attention FLOPs vs `chunked_attention`. Implemented
+    as a scan over the static list of (qi, ki) lower-triangle pairs.
+    """
+    B, Sq, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    chunk = min(chunk, Sq)
+    n = Sq // chunk
+    assert Sq % chunk == 0 and k.shape[1] == Sq, "block_tri needs Sq == Skv"
+    if window > 0:
+        # pairs within the window band only
+        band = max(1, -(-window // chunk) + 1)
+        pairs = [(qi, ki) for qi in range(n) for ki in range(max(0, qi - band + 1), qi + 1)]
+    else:
+        pairs = [(qi, ki) for qi in range(n) for ki in range(qi + 1)]
+    qi_ids = jnp.array([p[0] for p in pairs])
+    ki_ids = jnp.array([p[1] for p in pairs])
+    qc = jnp.moveaxis(q.reshape(B, n, chunk, H, D), 1, 0)       # [n,B,c,H,D]
+    kc = jnp.moveaxis(k.reshape(B, n, chunk, H, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n, chunk, H, v.shape[-1]), 1, 0)
+
+    def body(carry, pair):
+        o_acc, m_acc, l_acc = carry        # [n,B,H,c,Dv], [n,B,H,c], [n,B,H,c]
+        qi, ki = pair
+        qb = jnp.take(qc, qi, axis=0)                            # [B,c,H,D]
+        kb = jnp.take(kc, ki, axis=0)
+        vb = jnp.take(vc, ki, axis=0)
+        qpos = q_offset + qi * chunk + jnp.arange(chunk)
+        kpos = q_offset + ki * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        msk = kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            msk &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_acc[qi], jnp.max(s, axis=-1))      # [B,H,c]
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_acc[qi] - m_new)
+        l_new = l_acc[qi] * alpha + jnp.sum(p, axis=-1)
+        o_new = o_acc[qi] * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (o_acc.at[qi].set(o_new), m_acc.at[qi].set(m_new),
+                l_acc.at[qi].set(l_new)), None
+
+    Dv = v.shape[-1]
+    init = (jnp.zeros((n, B, H, chunk, Dv), jnp.float32),
+            jnp.full((n, B, H, chunk), NEG_INF, jnp.float32),
+            jnp.zeros((n, B, H, chunk), jnp.float32))
+    (o, m, l), _ = jax.lax.scan(body, init, (qi_ids, ki_ids))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(o, 2, 3).reshape(n, B, chunk, H, Dv) \
+        .swapaxes(0, 1).reshape(B, Sq, H, Dv).astype(v.dtype)
+
+
+def causal_split_attention(q, k, v, *, chunk=512, q_offset=0, depth=3):
+    """Recursive causal decomposition (the jnp-level triangular skip).
+
+    The lower query half attends only to the lower KV half (recurse); the
+    upper half attends to everything (plain masked chunked attention).
+    FLOPs fall to (0.5 + 2^-depth) of masked-full; unlike an online-softmax
+    accumulator scan, every piece stays a simple fused einsum — no O(n^2)
+    accumulator read-modify-writes through HBM (see EXPERIMENTS §Perf:
+    the block_tri accumulator variant REGRESSED the memory term 4x).
+    """
+    B, S, H, D = q.shape
+    if depth <= 0 or S < 2 * chunk or S % 2 or q_offset != 0 \
+            or k.shape[1] != S:
+        return chunked_attention(q, k, v, causal=True, chunk=chunk,
+                                 q_offset=q_offset)
+    half = S // 2
+    lo = causal_split_attention(q[:, :half], k[:, :half], v[:, :half],
+                                chunk=chunk, depth=depth - 1)
+    hi = chunked_attention(q[:, half:], k, v, causal=True, chunk=chunk,
+                           q_offset=half)
+    return jnp.concatenate([lo, hi], axis=1)
+
+
+def attention(q, k, v, *, impl="chunked", causal=True, window=0, chunk=1024,
+              q_offset=0, kv_valid_len=None):
+    if impl == "block_tri" and causal and kv_valid_len is None \
+            and window == 0 and q_offset == 0 and k.shape[1] == q.shape[1]:
+        return causal_split_attention(q, k, v, chunk=chunk)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             chunk=chunk, q_offset=q_offset,
+                             kv_valid_len=kv_valid_len)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array) -> jax.Array:
+    """One-token attention against a cache.
+
+    q [B,1,H,D], caches [B,Sc,H,D(v)] (head-repeated), cache_len [] or [B].
+    The new token's k/v must already be written into the cache at
+    position cache_len - 1 (ring-indexed for windowed caches).
+    """
+    B, Sc = k_cache.shape[0], k_cache.shape[1]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(Sc)[None] < jnp.broadcast_to(
+        jnp.asarray(cache_len).reshape(-1, 1), (B, 1))           # [B,Sc]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v_cache)

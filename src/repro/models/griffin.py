@@ -1,0 +1,102 @@
+"""RecurrentGemma / Griffin blocks: RG-LRU recurrence + local attention.
+
+Recurrent block: x -> [linear -> causal conv -> RG-LRU] * gelu(linear) -> out.
+RG-LRU: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with
+a_t = exp(-c * softplus(L) * sigmoid(W_a x_t)), i_t = sigmoid(W_i x_t).
+Full sequences use jax.lax.associative_scan (log-depth on TPU).
+[arXiv:2402.19427]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import ParamSpec, apply_norm, norm_defs
+
+RG_C = 8.0
+
+
+def rec_defs(cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "ln": norm_defs(cfg.norm_kind, d),
+        "wx": ParamSpec((d, w), ("embed", "mlp")),
+        "wy": ParamSpec((d, w), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, w), ("conv", "mlp")),
+        "conv_b": ParamSpec((w,), ("mlp",), init="zeros"),
+        "w_a": ParamSpec((w, w), ("mlp", None)),
+        "w_i": ParamSpec((w, w), ("mlp", None)),
+        "lam": ParamSpec((w,), ("mlp",), init="ones"),   # softplus(lam) > 0
+        "out": ParamSpec((w, d), ("mlp", "embed")),
+    }
+
+
+def rec_cache_defs(cfg, batch: int) -> dict:
+    w = cfg.lru_width
+    return {
+        "conv": ParamSpec((batch, cfg.ssm_conv - 1, w),
+                          ("cache_batch", None, "cache_heads"),
+                          init="zeros", dtype=cfg.compute_dtype),
+        "state": ParamSpec((batch, w), ("cache_batch", "cache_heads"),
+                           init="zeros", dtype=jnp.float32),
+    }
+
+
+def _rglru(xc, a_gate, i_gate, lam, init_state=None):
+    """xc [B,S,W] conv output; gates [B,S,W]. Returns (y, final_state)."""
+    log_a = (-RG_C * jax.nn.softplus(lam.astype(jnp.float32))[None, None]
+             * jax.nn.sigmoid(a_gate.astype(jnp.float32)))          # [B,S,W]
+    a = jnp.exp(log_a)
+    gated = (jax.nn.sigmoid(i_gate.astype(jnp.float32))
+             * xc.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    if init_state is not None:
+        # fold the initial state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([init_state.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = bv if init_state is None else bv[:, 1:]
+    return h.astype(xc.dtype), bv[:, -1]
+
+
+def rec_apply(cfg, p, x, sh, *, cache=None, **_):
+    B, S, d = x.shape
+    h = apply_norm(cfg.norm_kind, p["ln"], x, cfg.norm_eps)
+    xb = h @ p["wx"].astype(h.dtype)                       # recurrent branch
+    yb = jax.nn.gelu(h @ p["wy"].astype(h.dtype))          # gate branch
+    xb = sh(xb, "batch", None, "act_mlp")
+
+    from repro.models.mamba2 import _causal_conv
+    if cache is None:
+        xc, _ = _causal_conv(xb, p["conv_w"].astype(h.dtype),
+                             p["conv_b"].astype(h.dtype), act=False)
+        a_gate = xc @ p["w_a"].astype(h.dtype)
+        i_gate = xc @ p["w_i"].astype(h.dtype)
+        y, _ = _rglru(xc, a_gate, i_gate, p["lam"])
+        new_cache = None
+    else:
+        conv_in = jnp.concatenate([cache["conv"].astype(h.dtype), xb], axis=1)
+        w = p["conv_w"].astype(h.dtype)
+        xc = (jnp.sum(conv_in * w[None], axis=1, keepdims=True)
+              + p["conv_b"].astype(h.dtype)[None, None])
+        a_gate = xc @ p["w_a"].astype(h.dtype)
+        i_gate = xc @ p["w_i"].astype(h.dtype)
+        log_a = (-RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32))[None]
+                 * jax.nn.sigmoid(a_gate[:, 0].astype(jnp.float32)))
+        a = jnp.exp(log_a)
+        gated = (jax.nn.sigmoid(i_gate[:, 0].astype(jnp.float32))
+                 * xc[:, 0].astype(jnp.float32))
+        new_state = (a * cache["state"]
+                     + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated)
+        y = new_state.astype(xc.dtype)[:, None]
+        new_cache = {"conv": conv_in[:, 1:].astype(cache["conv"].dtype),
+                     "state": new_state}
+
+    out = (y * yb) @ p["out"].astype(h.dtype)
+    return x + sh(out, "batch", "seq", "act_embed"), new_cache

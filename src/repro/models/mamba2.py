@@ -1,0 +1,178 @@
+"""Mamba-2 block: state-space duality (SSD), chunked algorithm.
+
+Follows the minimal SSD reference of [arXiv:2405.21060] (Listing 1): within
+chunks the quadratic "attention-like" form, across chunks a linear state
+recurrence. ``kernels/ssd_scan`` is the Pallas TPU version of the chunk
+kernel; this module is the jnp path used on CPU and as the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import ParamSpec, apply_norm, norm_defs
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_in, nheads, conv_dim
+
+
+def mamba_defs(cfg) -> dict:
+    d = cfg.d_model
+    d_in, nheads, conv_dim = dims(cfg)
+    return {
+        "ln": norm_defs(cfg.norm_kind, d),
+        # order: [z, x, B, C, dt]
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * cfg.ssm_ngroups * cfg.ssm_state
+                              + nheads), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), ("conv", "mlp")),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((nheads,), ("heads_q",), init="zeros"),
+        "D": ParamSpec((nheads,), ("heads_q",), init="ones"),
+        "dt_bias": ParamSpec((nheads,), ("heads_q",), init="zeros"),
+        "out_ln": {"scale": ParamSpec((d_in,), ("mlp",), init="ones")},
+        "out_proj": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def mamba_cache_defs(cfg, batch: int) -> dict:
+    d_in, nheads, conv_dim = dims(cfg)
+    return {
+        "conv": ParamSpec((batch, cfg.ssm_conv - 1, conv_dim),
+                          ("cache_batch", None, "cache_heads"),
+                          init="zeros", dtype=cfg.compute_dtype),
+        "ssm": ParamSpec((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                         ("cache_batch", "cache_heads", None, None),
+                         init="zeros", dtype=jnp.float32),
+    }
+
+
+def _segsum(a):
+    """a [..., q] -> [..., q, q] lower-tri cumulative sums: sum_{j<i<=k} a_i."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD over a full sequence.
+
+    x [B,S,H,P], dt [B,S,H] (post-softplus), A [H] (negative),
+    Bm/Cm [B,S,G,N]. Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xb = (x * dt[..., None]).reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, G, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, G, N).astype(jnp.float32)
+    Bh = jnp.repeat(Bc, rep, axis=3)                       # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    dA = (dt * A[None, None, :]).reshape(Bsz, nc, Q, H)
+    dA = jnp.moveaxis(dA, -1, 1)                           # [B,H,nc,Q]
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(dA))                               # [B,H,nc,Q,Q]
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Ch, Bh, L, xb)
+
+    # chunk states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)        # [B,H,nc,Q]
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", Bh, decay_states, xb)
+
+    # inter-chunk recurrence (small quadratic over #chunks)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    states = jnp.concatenate([init_state[:, None], states], axis=1)  # [B,nc+1,...]
+    chunk_decay = dA_cs[..., -1]                           # [B,H,nc]
+    dc = jnp.exp(_segsum(jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))))
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", dc, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # inter-chunk contribution
+    state_decay_out = jnp.exp(dA_cs)                       # [B,H,nc,Q]
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, prev_states,
+                       state_decay_out)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def _causal_conv(seq, w, b, state=None, act: bool = True):
+    """Depthwise causal conv. seq [B,S,C], w [K,C]. Returns (out, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((seq.shape[0], K - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = state.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i][None, None] for i in range(K))
+    out = out + b[None, None]
+    return (jax.nn.silu(out) if act else out), full[:, -(K - 1):]
+
+
+def mamba_apply(cfg, p, x, sh, *, cache=None, **_):
+    """Full-seq when cache is None; single-token recurrence otherwise."""
+    B, S, d = x.shape
+    d_in, nheads, conv_dim = dims(cfg)
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    h = apply_norm(cfg.norm_kind, p["ln"], x, cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"].astype(h.dtype)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_dim]
+    dt_raw = zxbcdt[..., -nheads:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is None:
+        xBC, _ = _causal_conv(xBC, p["conv_w"].astype(h.dtype),
+                              p["conv_b"].astype(h.dtype))
+        xs = xBC[..., :d_in].reshape(B, S, nheads, cfg.ssm_head_dim)
+        Bm = xBC[..., d_in:d_in + G * N].reshape(B, S, G, N)
+        Cm = xBC[..., d_in + G * N:].reshape(B, S, G, N)
+        xs = sh(xs, "batch", None, "act_heads", None)
+        dt = sh(dt, "batch", None, "act_heads")
+        if cfg.use_pallas:
+            from repro.kernels.ssd_scan.ops import ssd
+            y, _ = ssd(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+        else:
+            y, _ = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+        y = y + xs * p["D"].astype(xs.dtype)[None, None, :, None]
+        new_cache = None
+    else:
+        # decode: conv ring + linear state update
+        conv_in = jnp.concatenate(
+            [cache["conv"].astype(h.dtype), xBC], axis=1)  # [B,K,convdim]
+        w = p["conv_w"].astype(h.dtype)
+        conv_out = jax.nn.silu(
+            jnp.sum(conv_in * w[None], axis=1, keepdims=True)
+            + p["conv_b"].astype(h.dtype)[None, None])
+        xs = conv_out[..., :d_in].reshape(B, 1, nheads, cfg.ssm_head_dim)
+        Bm = conv_out[..., d_in:d_in + G * N].reshape(B, 1, G, N)
+        Cm = conv_out[..., d_in + G * N:].reshape(B, 1, G, N)
+        rep = nheads // G
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1).astype(jnp.float32)  # [B,H,N]
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1).astype(jnp.float32)
+        dt1 = dt[:, 0]                                      # [B,H]
+        dA = jnp.exp(dt1 * A[None])                         # [B,H]
+        xf = xs[:, 0].astype(jnp.float32)                   # [B,H,P]
+        new_ssm = (cache["ssm"] * dA[..., None, None]
+                   + jnp.einsum("bhp,bhn->bhpn", xf * dt1[..., None], Bh))
+        y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Ch)[:, None]
+        y = y.astype(xs.dtype) + xs * p["D"].astype(xs.dtype)[None, None, :, None]
+        new_cache = {"conv": conv_in[:, 1:].astype(cache["conv"].dtype),
+                     "ssm": new_ssm}
+
+    y = y.reshape(B, S, d_in)
+    y = apply_norm("rms", p["out_ln"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(h.dtype)
+    return x + sh(out, "batch", "seq", "act_embed"), new_cache

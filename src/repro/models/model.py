@@ -1,0 +1,723 @@
+"""Model assembly: config -> ModelBundle (loss / prefill / decode + defs).
+
+A bundle is everything launch/ needs:
+  param_defs            ParamSpec tree (init, abstract shapes, shardings)
+  loss_fn(p, batch)     -> (loss, metrics)          [train_4k]
+  prefill_fn(p, batch)  -> (last_logits, cache)     [prefill_32k]
+  decode_fn(p, cache, batch) -> (logits, cache)     [decode_32k / long_500k]
+  cache_defs(batch, cache_len, long) -> ParamSpec tree (+ "len" scalar)
+  batch_defs(shape)     -> ParamSpec tree of inputs
+
+Layer stacking: homogeneous stacks are scanned (weights stacked on a leading
+"layers" dim); heterogeneous archs scan over repeating *super-blocks*
+(llama4: 4-layer period; griffin: rec,rec,attn triples) with any remainder
+unrolled; whisper (4+4 layers) is fully unrolled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import griffin as G
+from repro.models import mamba2 as M
+from repro.models import transformer as T
+from repro.models.modules import (ParamSpec, Sharder, apply_norm, norm_defs,
+                                  softmax_cross_entropy, stack_specs)
+
+AUX_WEIGHT = 0.01
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    param_defs: Any
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    cache_defs: Callable
+    batch_defs: Callable
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _vpad(cfg) -> int:
+    return cfg.pad_vocab_to or cfg.vocab_size
+
+
+def _embed_defs(cfg) -> dict:
+    d = {"embed": ParamSpec((_vpad(cfg), cfg.d_model), ("vocab", "embed"),
+                            init="embed", init_scale=0.02),
+         "final_ln": norm_defs(cfg.norm_kind, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamSpec((cfg.d_model, _vpad(cfg)),
+                                 ("embed", "vocab"))
+    return d
+
+
+def _embed(cfg, p, tokens, sh):
+    x = jnp.take(p["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    return sh(x, "batch", "seq", "act_embed")
+
+
+def _head(cfg, p):
+    if cfg.tie_embeddings:
+        return p["embed"].T
+    return p["lm_head"]
+
+
+def _logits(cfg, p, h, sh):
+    out = h @ _head(cfg, p).astype(h.dtype)
+    out = sh(out, "batch", None, "act_heads")
+    return out[..., :cfg.vocab_size]          # drop vocab padding (serving)
+
+
+def _lm_loss(cfg, p, h, targets, mask, sh):
+    """CE with optional seq-chunked logits (rematerialized in backward).
+    Padded vocab entries are masked to -inf, so padding is exact."""
+    head = _head(cfg, p).astype(h.dtype)
+    B, S, d = h.shape
+    vmask = None
+    if _vpad(cfg) != cfg.vocab_size:
+        vmask = jnp.arange(_vpad(cfg)) < cfg.vocab_size
+
+    def _mask(lg):
+        return lg if vmask is None else jnp.where(vmask, lg, -1e30)
+
+    ck = cfg.logit_chunk
+    if not ck or S % ck or S <= ck:
+        logits = sh(h @ head, "batch", None, "act_heads")
+        return softmax_cross_entropy(_mask(logits.astype(jnp.float32)),
+                                     targets, mask)
+    n = S // ck
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hc, tc, mc = xs                                     # [B,ck,...]
+        logits = sh(hc @ head, "batch", None, "act_heads")
+        lg = _mask(logits.astype(jnp.float32))
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+        mf = mc.astype(jnp.float32)
+        return (carry[0] + jnp.sum((lse - ll) * mf),
+                carry[1] + jnp.sum(mf)), None
+
+    xs = (jnp.moveaxis(h.reshape(B, n, ck, d), 1, 0),
+          jnp.moveaxis(targets.reshape(B, n, ck), 1, 0),
+          jnp.moveaxis(mask.reshape(B, n, ck), 1, 0))
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _maybe_remat(f, cfg, mode):
+    if mode != "train" or cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(f, policy=pol)
+    return jax.checkpoint(f)
+
+
+def _base_batch_defs(cfg, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"tokens": ParamSpec((B, S), ("batch", "seq"), "zeros", jnp.int32),
+                "targets": ParamSpec((B, S), ("batch", "seq"), "zeros", jnp.int32),
+                "mask": ParamSpec((B, S), ("batch", "seq"), "ones", jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": ParamSpec((B, S), ("batch", "seq"), "zeros", jnp.int32)}
+    return {"token": ParamSpec((B, 1), ("batch", "seq"), "zeros", jnp.int32)}
+
+
+def _len_def() -> ParamSpec:
+    return ParamSpec((), (), "zeros", jnp.int32)
+
+
+def _positions(B, S, offset=0):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None] + offset,
+                            (B, S))
+
+
+# ---------------------------------------------------------------------------
+# family: homogeneous decoder LMs (glm4, granite, smollm, starcoder2, qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def _decoder_lm(cfg: ModelConfig, rules=None, mesh=None) -> ModelBundle:
+    sh = Sharder(mesh, rules)
+    is_vlm = cfg.family == "vlm"
+    layer_defs = T.layer_defs(cfg)
+    defs = {**_embed_defs(cfg),
+            "layers": stack_specs(layer_defs, cfg.num_layers)}
+
+    def fwd(p, x, positions, mode, cache=None, cache_len=None, mpos=None):
+        def body(carry, xs):
+            x, aux = carry
+            pl, cl = xs if cache is not None else (xs, None)
+            x, new_c, a = T.layer_apply(
+                cfg, pl, x, sh, positions=positions, layer_kind=_lk(cfg),
+                cache=cl, cache_len=cache_len, mrope_positions=mpos)
+            return (x, aux + a), (new_c if cache is not None else None)
+        body = _maybe_remat(body, cfg, mode)
+        xs = (p["layers"], cache) if cache is not None else p["layers"]
+        (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        return x, aux, new_cache
+
+    def _lk(cfg):
+        return "window" if cfg.window else "full"
+
+    def loss_fn(p, batch):
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        mpos = batch.get("mrope_positions")
+        if is_vlm:
+            v = batch["vision_embeds"].astype(x.dtype)
+            x = jnp.concatenate([v, x[:, v.shape[1]:]], axis=1)
+        x, aux, _ = fwd(p, x, _positions(B, S), "train", mpos=mpos)
+        ce = _lm_loss(cfg, p, x, batch["targets"], batch["mask"], sh)
+        loss = ce + AUX_WEIGHT * aux / max(cfg.num_layers, 1)
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    def prefill_fn(p, batch):
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        mpos = batch.get("mrope_positions")
+        if is_vlm:
+            v = batch["vision_embeds"].astype(x.dtype)
+            x = jnp.concatenate([v, x[:, v.shape[1]:]], axis=1)
+        x, _, kv = fwd_prefill_cache(p, x, B, S, mpos)
+        logits = _logits(cfg, p, x[:, -1:], sh)
+        kv["len"] = jnp.int32(S)
+        return logits, kv
+
+    def fwd_prefill_cache(p, x, B, S, mpos):
+        # run full fwd, collect per-layer k/v as scan ys
+        def body(x, pl):
+            xo, c, _ = T.layer_apply(
+                cfg, pl, x, sh, positions=_positions(B, S),
+                layer_kind=_lk(cfg), cache=None, mrope_positions=mpos)
+            # emit cache from full-seq kv (ring order for windowed layers)
+            return xo, _ring_cache(cfg, c)
+        x, kv = jax.lax.scan(body, x, p["layers"])
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        return x, None, {"kv": kv}
+
+    def _ring_cache(cfg, c):
+        return c  # full-attention archs: cache == full kv (see window archs)
+
+    def decode_fn(p, cache, batch):
+        B = batch["token"].shape[0]
+        pos = cache["len"]
+        x = _embed(cfg, p, batch["token"], sh)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        mpos = None
+        if cfg.mrope:
+            mpos = jnp.broadcast_to(pos[None, None, None], (3, B, 1)).astype(jnp.int32)
+        x, _, new_kv = fwd(p, x, positions, "decode", cache=cache["kv"],
+                           cache_len=pos, mpos=mpos)
+        logits = _logits(cfg, p, x, sh)
+        return logits, {"kv": new_kv, "len": pos + 1}
+
+    def cache_defs(batch, cache_len, long=False):
+        kv = stack_specs(T.attn_cache_defs(cfg, batch, cache_len, long),
+                         cfg.num_layers)
+        return {"kv": kv, "len": _len_def()}
+
+    def batch_defs(shape: ShapeConfig):
+        b = _base_batch_defs(cfg, shape)
+        if is_vlm and shape.kind in ("train", "prefill"):
+            P = min(cfg.vision_prefix, shape.seq_len // 2)
+            b["vision_embeds"] = ParamSpec(
+                (shape.global_batch, P, cfg.d_model),
+                ("batch", "seq", "act_embed"), "zeros", cfg.compute_dtype)
+        if cfg.mrope and shape.kind in ("train", "prefill"):
+            b["mrope_positions"] = ParamSpec(
+                (3, shape.global_batch, shape.seq_len),
+                (None, "batch", "seq"), "zeros", jnp.int32)
+        return b
+
+    return ModelBundle(cfg, defs, loss_fn, prefill_fn, decode_fn,
+                       cache_defs, batch_defs)
+
+
+# ---------------------------------------------------------------------------
+# family: deepseek-v2 (MLA; layer0 dense, rest MoE)
+# ---------------------------------------------------------------------------
+
+def _deepseek(cfg: ModelConfig, rules=None, mesh=None) -> ModelBundle:
+    sh = Sharder(mesh, rules)
+    n_moe = cfg.num_layers - cfg.moe.first_dense
+    defs = {**_embed_defs(cfg),
+            "layer0": T.layer_defs(cfg, attn="mla", mlp="mlp", d_ff=cfg.d_ff),
+            "layers": stack_specs(
+                T.layer_defs(cfg, attn="mla", mlp="moe"), n_moe)}
+
+    def fwd(p, x, positions, mode, cache=None, cache_len=None):
+        c0 = cache["l0"] if cache is not None else None
+        x, c0n, aux0 = T.layer_apply(cfg, p["layer0"], x, sh,
+                                     positions=positions, attn="mla",
+                                     cache=c0, cache_len=cache_len)
+
+        def body(carry, xs):
+            x, aux = carry
+            pl, cl = xs if cache is not None else (xs, None)
+            x, nc, a = T.layer_apply(cfg, pl, x, sh, positions=positions,
+                                     attn="mla", mlp="moe", cache=cl,
+                                     cache_len=cache_len)
+            return (x, aux + a), (nc if cache is not None else None)
+        body = _maybe_remat(body, cfg, mode)
+        xs = (p["layers"], cache["ls"]) if cache is not None else p["layers"]
+        (x, aux), ncs = jax.lax.scan(body, (x, aux0), xs)
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        new_cache = None if cache is None else {"l0": c0n, "ls": ncs}
+        return x, aux, new_cache
+
+    def loss_fn(p, batch):
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        x, aux, _ = fwd(p, x, _positions(B, S), "train")
+        ce = _lm_loss(cfg, p, x, batch["targets"], batch["mask"], sh)
+        loss = ce + AUX_WEIGHT * aux / cfg.num_layers
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    def prefill_fn(p, batch):
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        pos = _positions(B, S)
+        x0, c0, _ = T.layer_apply(cfg, p["layer0"], x, sh, positions=pos,
+                                  attn="mla")
+
+        def body(x, pl):
+            xo, c, _ = T.layer_apply(cfg, pl, x, sh, positions=pos,
+                                     attn="mla", mlp="moe")
+            return xo, c
+        x, cs = jax.lax.scan(body, x0, p["layers"])
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        logits = _logits(cfg, p, x[:, -1:], sh)
+        return logits, {"l0": c0, "ls": cs, "len": jnp.int32(S)}
+
+    def decode_fn(p, cache, batch):
+        B = batch["token"].shape[0]
+        pos = cache["len"]
+        x = _embed(cfg, p, batch["token"], sh)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x, _, nc = fwd(p, x, positions, "decode",
+                       cache={"l0": cache["l0"], "ls": cache["ls"]},
+                       cache_len=pos)
+        logits = _logits(cfg, p, x, sh)
+        nc["len"] = pos + 1
+        return logits, nc
+
+    def cache_defs(batch, cache_len, long=False):
+        one = T.mla_cache_defs(cfg, batch, cache_len, long)
+        return {"l0": one, "ls": stack_specs(one, n_moe), "len": _len_def()}
+
+    return ModelBundle(cfg, defs, loss_fn, prefill_fn, decode_fn, cache_defs,
+                       functools.partial(_base_batch_defs, cfg))
+
+
+# ---------------------------------------------------------------------------
+# family: llama4 (super-blocks of 4: chunked/global attn x dense/moe mlp)
+# ---------------------------------------------------------------------------
+
+LLAMA4_PERIOD = 4
+
+
+def _llama4_subkinds(cfg):
+    """(attn_kind, mlp_kind) for each sub-layer of the 4-layer super-block."""
+    out = []
+    for i in range(LLAMA4_PERIOD):
+        attn = "full" if (i + 1) % cfg.global_every == 0 else "chunked"
+        mlp = "moe" if i % cfg.moe.every_k_layers == 1 else "mlp"
+        out.append((attn, mlp))
+    return out
+
+
+def _llama4(cfg: ModelConfig, rules=None, mesh=None) -> ModelBundle:
+    sh = Sharder(mesh, rules)
+    assert cfg.num_layers % LLAMA4_PERIOD == 0
+    n_sb = cfg.num_layers // LLAMA4_PERIOD
+    kinds = _llama4_subkinds(cfg)
+    sb_defs = {f"sub{i}": T.layer_defs(cfg, mlp=k[1],
+                                       d_ff=cfg.moe.dense_d_ff)
+               for i, k in enumerate(kinds)}
+    defs = {**_embed_defs(cfg), "blocks": stack_specs(sb_defs, n_sb)}
+
+    def sb_apply(p_sb, x, positions, cache_sb, cache_len):
+        aux = jnp.float32(0)
+        new_cache = {}
+        for i, (attn_kind, mlp_kind) in enumerate(kinds):
+            use_rope = attn_kind != "full"      # iRoPE: global layers NoPE
+            c = cache_sb[f"sub{i}"] if cache_sb is not None else None
+            x, nc, a = _l4_layer(p_sb[f"sub{i}"], x, positions, attn_kind,
+                                 mlp_kind, c, cache_len, use_rope)
+            new_cache[f"sub{i}"] = nc
+            aux = aux + a
+        return x, new_cache if cache_sb is not None else None, aux
+
+    def _l4_layer(pl, x, positions, attn_kind, mlp_kind, c, cache_len, rope):
+        lcfg = cfg if rope else cfg.replace(rope_theta=0.0)
+        x, nc = T.attn_apply(lcfg, pl["attn"], x, sh, positions=positions,
+                             layer_kind=attn_kind, cache=c,
+                             cache_len=cache_len)
+        if mlp_kind == "moe":
+            from repro.models.moe import moe_apply
+            x, a = moe_apply(cfg, pl["mlp"], x, sh)
+        else:
+            x, a = T.mlp_apply(cfg, pl["mlp"], x, sh), jnp.float32(0)
+        return x, nc, a
+
+    def fwd(p, x, positions, mode, cache=None, cache_len=None):
+        def body(carry, xs):
+            x, aux = carry
+            pb, cb = xs if cache is not None else (xs, None)
+            x, ncb, a = sb_apply(pb, x, positions, cb, cache_len)
+            return (x, aux + a), ncb
+        body = _maybe_remat(body, cfg, mode)
+        xs = (p["blocks"], cache) if cache is not None else p["blocks"]
+        (x, aux), nc = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        return x, aux, nc
+
+    def loss_fn(p, batch):
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        x, aux, _ = fwd(p, x, _positions(B, S), "train")
+        ce = _lm_loss(cfg, p, x, batch["targets"], batch["mask"], sh)
+        loss = ce + AUX_WEIGHT * aux / cfg.num_layers
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    def prefill_fn(p, batch):
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        pos = _positions(B, S)
+
+        def body(x, pb):
+            xo, _, _ = sb_apply(pb, x, pos, None, None)
+            return xo, None
+        x, _ = jax.lax.scan(body, x, p["blocks"])
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        # serving path re-prefills caches via decode loop; dry-run lowers this
+        logits = _logits(cfg, p, x[:, -1:], sh)
+        return logits, {"len": jnp.int32(S)}
+
+    def decode_fn(p, cache, batch):
+        B = batch["token"].shape[0]
+        pos = cache["len"]
+        x = _embed(cfg, p, batch["token"], sh)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x, _, nc = fwd(p, x, positions, "decode", cache=cache["blocks"],
+                       cache_len=pos)
+        logits = _logits(cfg, p, x, sh)
+        return logits, {"blocks": nc, "len": pos + 1}
+
+    def cache_defs(batch, cache_len, long=False):
+        sb = {}
+        for i, (attn_kind, _) in enumerate(kinds):
+            W = cache_len if attn_kind == "full" else min(
+                cfg.chunked_local, cache_len)
+            sb[f"sub{i}"] = T.attn_cache_defs(
+                cfg, batch, W, long and attn_kind == "full")
+        return {"blocks": stack_specs(sb, n_sb), "len": _len_def()}
+
+    return ModelBundle(cfg, defs, loss_fn, prefill_fn, decode_fn, cache_defs,
+                       functools.partial(_base_batch_defs, cfg))
+
+
+# ---------------------------------------------------------------------------
+# family: mamba2
+# ---------------------------------------------------------------------------
+
+def _mamba(cfg: ModelConfig, rules=None, mesh=None) -> ModelBundle:
+    sh = Sharder(mesh, rules)
+    defs = {**_embed_defs(cfg),
+            "layers": stack_specs(M.mamba_defs(cfg), cfg.num_layers)}
+
+    def fwd(p, x, mode, cache=None):
+        def body(carry, xs):
+            x = carry
+            pl, cl = xs if cache is not None else (xs, None)
+            x, nc = M.mamba_apply(cfg, pl, x, sh, cache=cl)
+            return x, nc
+        body = _maybe_remat(body, cfg, mode)
+        xs = (p["layers"], cache) if cache is not None else p["layers"]
+        x, nc = jax.lax.scan(body, x, xs)
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        return x, nc
+
+    def loss_fn(p, batch):
+        x = _embed(cfg, p, batch["tokens"], sh)
+        x, _ = fwd(p, x, "train")
+        ce = _lm_loss(cfg, p, x, batch["targets"], batch["mask"], sh)
+        return ce, {"loss": ce, "ce": ce}
+
+    def prefill_fn(p, batch):
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+
+        def body(x, pl):
+            xo, _ = M.mamba_apply(cfg, pl, x, sh)
+            return xo, None
+        x, _ = jax.lax.scan(body, x, p["layers"])
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        logits = _logits(cfg, p, x[:, -1:], sh)
+        return logits, {"len": jnp.int32(S)}
+
+    def decode_fn(p, cache, batch):
+        pos = cache["len"]
+        x = _embed(cfg, p, batch["token"], sh)
+        x, nc = fwd(p, x, "decode", cache=cache["layers"])
+        logits = _logits(cfg, p, x, sh)
+        return logits, {"layers": nc, "len": pos + 1}
+
+    def cache_defs(batch, cache_len, long=False):
+        return {"layers": stack_specs(M.mamba_cache_defs(cfg, batch),
+                                      cfg.num_layers),
+                "len": _len_def()}
+
+    return ModelBundle(cfg, defs, loss_fn, prefill_fn, decode_fn, cache_defs,
+                       functools.partial(_base_batch_defs, cfg))
+
+
+# ---------------------------------------------------------------------------
+# family: griffin / recurrentgemma (rec,rec,attn triples + remainder)
+# ---------------------------------------------------------------------------
+
+def _griffin(cfg: ModelConfig, rules=None, mesh=None) -> ModelBundle:
+    sh = Sharder(mesh, rules)
+    pat = cfg.block_pattern                                    # ("rec","rec","attn")
+    n_tri = cfg.num_layers // len(pat)
+    n_tail = cfg.num_layers - n_tri * len(pat)
+    tri_defs = {}
+    for i, kind in enumerate(pat):
+        if kind == "rec":
+            tri_defs[f"sub{i}"] = {"mix": G.rec_defs(cfg),
+                                   "mlp": T.mlp_defs(cfg)}
+        else:
+            tri_defs[f"sub{i}"] = {"mix": T.attn_defs(cfg),
+                                   "mlp": T.mlp_defs(cfg)}
+    defs = {**_embed_defs(cfg), "tri": stack_specs(tri_defs, n_tri)}
+    for t in range(n_tail):
+        defs[f"tail{t}"] = {"mix": G.rec_defs(cfg), "mlp": T.mlp_defs(cfg)}
+
+    def _sub_apply(kind, pl, x, positions, c, cache_len):
+        if kind == "rec":
+            x, nc = G.rec_apply(cfg, pl["mix"], x, sh, cache=c)
+        else:
+            x, nc = T.attn_apply(cfg, pl["mix"], x, sh, positions=positions,
+                                 layer_kind="window", cache=c,
+                                 cache_len=cache_len)
+        x = T.mlp_apply(cfg, pl["mlp"], x, sh)
+        return x, nc
+
+    def tri_apply(pb, x, positions, cb, cache_len):
+        nc = {}
+        for i, kind in enumerate(pat):
+            c = cb[f"sub{i}"] if cb is not None else None
+            x, nci = _sub_apply(kind, pb[f"sub{i}"], x, positions, c, cache_len)
+            nc[f"sub{i}"] = nci
+        return x, nc if cb is not None else None
+
+    def fwd(p, x, positions, mode, cache=None, cache_len=None):
+        def body(x, xs):
+            pb, cb = xs if cache is not None else (xs, None)
+            x, ncb = tri_apply(pb, x, positions, cb, cache_len)
+            return x, ncb
+        body = _maybe_remat(body, cfg, mode)
+        xs = (p["tri"], cache["tri"]) if cache is not None else p["tri"]
+        x, nct = jax.lax.scan(body, x, xs)
+        new_cache = {"tri": nct} if cache is not None else None
+        for t in range(n_tail):
+            c = cache[f"tail{t}"] if cache is not None else None
+            x, nc = _sub_apply("rec", p[f"tail{t}"], x, positions, c, cache_len)
+            if cache is not None:
+                new_cache[f"tail{t}"] = nc
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        return x, new_cache
+
+    def loss_fn(p, batch):
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        x, _ = fwd(p, x, _positions(B, S), "train")
+        ce = _lm_loss(cfg, p, x, batch["targets"], batch["mask"], sh)
+        return ce, {"loss": ce, "ce": ce}
+
+    def prefill_fn(p, batch):
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        x, _ = fwd(p, x, _positions(B, S), "prefill")
+        logits = _logits(cfg, p, x[:, -1:], sh)
+        return logits, {"len": jnp.int32(S)}
+
+    def decode_fn(p, cache, batch):
+        B = batch["token"].shape[0]
+        pos = cache["len"]
+        x = _embed(cfg, p, batch["token"], sh)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x, nc = fwd(p, x, positions, "decode", cache=cache, cache_len=pos)
+        logits = _logits(cfg, p, x, sh)
+        nc["len"] = pos + 1
+        return logits, nc
+
+    def cache_defs(batch, cache_len, long=False):
+        tri = {}
+        for i, kind in enumerate(pat):
+            if kind == "rec":
+                tri[f"sub{i}"] = G.rec_cache_defs(cfg, batch)
+            else:
+                W = min(cfg.window, cache_len)
+                tri[f"sub{i}"] = T.attn_cache_defs(cfg, batch, W)
+        out = {"tri": stack_specs(tri, n_tri), "len": _len_def()}
+        for t in range(n_tail):
+            out[f"tail{t}"] = G.rec_cache_defs(cfg, batch)
+        return out
+
+    return ModelBundle(cfg, defs, loss_fn, prefill_fn, decode_fn, cache_defs,
+                       functools.partial(_base_batch_defs, cfg))
+
+
+# ---------------------------------------------------------------------------
+# family: whisper (enc-dec; frame embeddings provided by the stub frontend)
+# ---------------------------------------------------------------------------
+
+WHISPER_MAX_DEC = 32768
+
+
+def _whisper(cfg: ModelConfig, rules=None, mesh=None) -> ModelBundle:
+    sh = Sharder(mesh, rules)
+    enc_layer = {"attn": T.attn_defs(cfg), "mlp": T.mlp_defs(cfg)}
+    dec_layer = {"self": T.attn_defs(cfg), "cross": T.attn_defs(cfg),
+                 "mlp": T.mlp_defs(cfg)}
+    defs = {**_embed_defs(cfg),
+            "enc_pos": ParamSpec((cfg.encoder_seq, cfg.d_model),
+                                 (None, "embed"), init="small"),
+            "dec_pos": ParamSpec((WHISPER_MAX_DEC, cfg.d_model),
+                                 (None, "embed"), init="small"),
+            "enc_ln": norm_defs(cfg.norm_kind, cfg.d_model),
+            "enc": [enc_layer for _ in range(cfg.encoder_layers)],
+            "dec": [dec_layer for _ in range(cfg.num_layers)]}
+
+    def encode(p, frames, mode="decode"):
+        x = frames.astype(cfg.compute_dtype)
+        x = x + p["enc_pos"].astype(x.dtype)[None, :x.shape[1]]
+        pos = _positions(x.shape[0], x.shape[1])
+
+        def one_layer(lp, x):
+            x, _ = T.attn_apply(cfg, lp["attn"], x, sh, positions=pos,
+                                layer_kind="bidir")
+            return T.mlp_apply(cfg, lp["mlp"], x, sh)
+        layer_fn = jax.checkpoint(one_layer) \
+            if (mode == "train" and cfg.remat != "none") else one_layer
+        for lp in p["enc"]:
+            x = layer_fn(lp, x)
+        return apply_norm(cfg.norm_kind, p["enc_ln"], x, cfg.norm_eps)
+
+    def decode_stack(p, x, enc_out, positions, cache=None, cache_len=None,
+                     mode="decode"):
+        def one_layer(lp, x, enc_out, c):
+            x, nc = T.attn_apply(cfg, lp["self"], x, sh, positions=positions,
+                                 layer_kind="full", cache=c,
+                                 cache_len=cache_len)
+            x, _ = T.attn_apply(cfg, lp["cross"], x, sh, positions=positions,
+                                layer_kind="cross", kv_override=enc_out)
+            x = T.mlp_apply(cfg, lp["mlp"], x, sh)
+            return x, nc
+        layer_fn = jax.checkpoint(one_layer) \
+            if (mode == "train" and cfg.remat != "none") else one_layer
+        ncs = []
+        for li, lp in enumerate(p["dec"]):
+            c = cache[li] if cache is not None else None
+            x, nc = layer_fn(lp, x, enc_out, c)
+            ncs.append(nc)
+        x = apply_norm(cfg.norm_kind, p["final_ln"], x, cfg.norm_eps)
+        return x, (ncs if cache is not None else None)
+
+    def loss_fn(p, batch):
+        enc_out = encode(p, batch["frames"], mode="train")
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        x = x + p["dec_pos"].astype(x.dtype)[None, :S]
+        x, _ = decode_stack(p, x, enc_out, _positions(B, S), mode="train")
+        ce = _lm_loss(cfg, p, x, batch["targets"], batch["mask"], sh)
+        return ce, {"loss": ce, "ce": ce}
+
+    def prefill_fn(p, batch):
+        enc_out = encode(p, batch["frames"])
+        B, S = batch["tokens"].shape
+        x = _embed(cfg, p, batch["tokens"], sh)
+        x = x + p["dec_pos"].astype(x.dtype)[None, :S]
+        x, _ = decode_stack(p, x, enc_out, _positions(B, S))
+        logits = _logits(cfg, p, x[:, -1:], sh)
+        return logits, {"len": jnp.int32(S)}
+
+    def decode_fn(p, cache, batch):
+        B = batch["token"].shape[0]
+        pos = cache["len"]
+        enc_out = encode(p, batch["frames"])
+        x = _embed(cfg, p, batch["token"], sh)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            p["dec_pos"].astype(x.dtype), pos, 1)[None]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x, ncs = decode_stack(p, x, enc_out, positions,
+                              cache=cache["dec"], cache_len=pos)
+        logits = _logits(cfg, p, x, sh)
+        return logits, {"dec": ncs, "len": pos + 1}
+
+    def cache_defs(batch, cache_len, long=False):
+        one = T.attn_cache_defs(cfg, batch, cache_len)
+        return {"dec": [one for _ in range(cfg.num_layers)],
+                "len": _len_def()}
+
+    def batch_defs(shape: ShapeConfig):
+        b = _base_batch_defs(cfg, shape)
+        b["frames"] = ParamSpec(
+            (shape.global_batch, cfg.encoder_seq, cfg.d_model),
+            ("batch", "seq", "act_embed"), "zeros", cfg.compute_dtype)
+        return b
+
+    return ModelBundle(cfg, defs, loss_fn, prefill_fn, decode_fn, cache_defs,
+                       batch_defs)
+
+
+# ---------------------------------------------------------------------------
+
+def _apply_param_dtype(defs, dtype):
+    """In-place: weight matrices (ndim>=2) take cfg.param_dtype; 1D scales,
+    biases and integer leaves stay as declared. In-place so the family
+    closures (which captured the same containers) see the change."""
+    if isinstance(defs, dict):
+        for k, v in defs.items():
+            if isinstance(v, ParamSpec):
+                if len(v.shape) >= 2 and v.dtype == jnp.float32:
+                    defs[k] = dataclasses.replace(v, dtype=dtype)
+            else:
+                _apply_param_dtype(v, dtype)
+    elif isinstance(defs, (list, tuple)):
+        for v in defs:
+            _apply_param_dtype(v, dtype)
+
+
+def build_model(cfg: ModelConfig, mesh=None, rules=None) -> ModelBundle:
+    from repro.parallel.sharding import effective_rules
+    rules = effective_rules(cfg, rules)
+    if cfg.family == "audio":
+        b = _whisper(cfg, rules, mesh)
+    elif cfg.family == "ssm":
+        b = _mamba(cfg, rules, mesh)
+    elif cfg.family == "hybrid":
+        b = _griffin(cfg, rules, mesh)
+    elif cfg.family == "moe" and cfg.attn_kind == "mla":
+        b = _deepseek(cfg, rules, mesh)
+    elif cfg.family == "moe":
+        b = _llama4(cfg, rules, mesh)
+    else:
+        b = _decoder_lm(cfg, rules, mesh)
+    if cfg.param_dtype != jnp.float32:
+        _apply_param_dtype(b.param_defs, cfg.param_dtype)
+    return b

@@ -1,0 +1,180 @@
+"""Parameter-definition module system.
+
+No flax/haiku on this box, so models are written as pure functions over
+parameter pytrees. Model code declares parameters as ``ParamSpec`` leaves in
+nested dicts; the same declaration drives
+  * real initialization (``init_params``),
+  * abstract ShapeDtypeStruct trees for the dry-run (``abstract_params``),
+  * NamedSharding trees via logical-axis rules (parallel/sharding.py).
+
+Every ``ParamSpec`` names its dims with *logical axes* ("embed", "mlp",
+"q_heads", ...). ``parallel.sharding.logical_to_sharding`` maps those to mesh
+axes with divisibility fallbacks, so one model definition serves every mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | embed | small
+    dtype: Any = jnp.float32
+    init_scale: float | None = None  # overrides the default fan-in scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f"shape {self.shape} vs axes {self.logical_axes}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        scale = spec.init_scale if spec.init_scale is not None else 1.0
+        return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+    # fan-in scaled normal (truncated-normal-ish via plain normal is fine here)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+    if len(spec.shape) >= 3:  # stacked layers / experts: fan-in is the 2nd-to-last dim
+        fan_in = spec.shape[-2]
+    scale = spec.init_scale if spec.init_scale is not None else 1.0 / math.sqrt(fan_in)
+    if spec.init == "small":
+        scale = 0.02
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def init_params(defs: PyTree, key: jax.Array) -> PyTree:
+    """Materialize a parameter pytree from ParamSpec declarations."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(spec, k) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs: PyTree, shardings: PyTree | None = None) -> PyTree:
+    """ShapeDtypeStruct tree for .lower() — no allocation."""
+    if shardings is None:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+            defs, is_leaf=is_spec)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        defs, shardings, is_leaf=is_spec)
+
+
+def param_count(defs: PyTree) -> int:
+    return sum(int(np.prod(s.shape)) for s in
+               jax.tree.leaves(defs, is_leaf=is_spec))
+
+
+def param_bytes(defs: PyTree) -> int:
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(defs, is_leaf=is_spec))
+
+
+def stack_specs(defs: PyTree, n: int, axis_name: str = "layers") -> PyTree:
+    """Add a leading stacked-layers dim to every spec (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.logical_axes,
+                            s.init, s.dtype, s.init_scale),
+        defs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Sharder: threads (mesh, rules) through model code for activation constraints
+# ---------------------------------------------------------------------------
+
+class Sharder:
+    """Applies logical-axis sharding constraints to activations.
+
+    When mesh is None (single-device smoke tests) every call is a no-op, so
+    model code can unconditionally annotate.
+    """
+
+    def __init__(self, mesh=None, rules: dict[str, Any] | None = None):
+        self.mesh = mesh
+        self.rules = rules or {}
+
+    def __call__(self, x: jax.Array, *logical_axes: str | None) -> jax.Array:
+        if self.mesh is None:
+            return x
+        from repro.parallel.sharding import logical_to_sharding
+        sh = logical_to_sharding(x.shape, logical_axes, self.mesh, self.rules)
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    def sharding_for(self, shape, logical_axes):
+        from repro.parallel.sharding import logical_to_sharding
+        return logical_to_sharding(shape, logical_axes, self.mesh, self.rules)
+
+
+# ---------------------------------------------------------------------------
+# Common NN pieces (pure functions; params passed explicitly)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_defs(kind: str, d: int) -> PyTree:
+    if kind == "rms":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(kind: str, p: PyTree, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    if kind == "rms":
+        return rms_norm(x, p["scale"], eps)
+    return layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None):
+    """Mean next-token CE. logits [..., V] fp-anything; labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,180 @@
+"""Mixture-of-experts with Starling-style partitioned dispatch.
+
+The token->expert shuffle is the paper's C2/C3 in tensor form:
+  * tokens are *packed partition-major* (sorted by destination expert) into a
+    single contiguous buffer with a per-expert offsets header — exactly the
+    partitioned S3 object format of §3.2, computed by ``partition_pack``
+    (Pallas kernel on TPU, jnp oracle here);
+  * the buffer is then exchanged to the expert-parallel layout. Baseline
+    ``moe_impl="gspmd"`` lets XLA choose the collective from sharding
+    constraints; ``"hierarchical"`` (parallel/collectives.py) performs the
+    paper's multi-stage shuffle — intra-pod combine, then inter-pod exchange.
+
+Capacity-based dropping (GShard-style) bounds the per-expert buffer, like the
+paper bounding worker memory by tasks-per-stage.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import ParamSpec, apply_norm, norm_defs, swiglu
+
+
+def moe_defs(cfg) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    defs = {
+        "ln": norm_defs(cfg.norm_kind, d),
+        "router": ParamSpec((d, m.num_experts), ("embed", None), init="small"),
+        "w_gate": ParamSpec((m.num_experts, d, m.expert_d_ff),
+                            ("moe_e", "moe_d", "moe_f")),
+        "w_up": ParamSpec((m.num_experts, d, m.expert_d_ff),
+                          ("moe_e", "moe_d", "moe_f")),
+        "w_down": ParamSpec((m.num_experts, m.expert_d_ff, d),
+                            ("moe_e", "moe_f", "moe_d")),
+    }
+    if m.num_shared:
+        f = m.num_shared * m.expert_d_ff
+        defs["shared"] = {
+            "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+            "w_up": ParamSpec((d, f), ("embed", "mlp")),
+            "w_down": ParamSpec((f, d), ("mlp", "embed"))}
+    return defs
+
+
+def expert_capacity(tokens: int, num_experts: int, top_k: int,
+                    capacity_factor: float, align: int = 8) -> int:
+    c = int(math.ceil(tokens * top_k / num_experts * capacity_factor))
+    return max(align, (c + align - 1) // align * align)
+
+
+def route(cfg, p, h3):
+    """Router on the 3D residual (keeps its seq sharding — flattening to
+    [B*S, d] replicated a 21 GB/dev f32 copy at 32k prefill, §Perf A5).
+    Returns (weights [T,k], experts [T,k] int32, aux loss)."""
+    m = cfg.moe
+    B, S, _ = h3.shape
+    logits = (h3 @ p["router"].astype(h3.dtype)).astype(jnp.float32)
+    logits = logits.reshape(B * S, m.num_experts)
+    probs = jax.nn.softmax(logits, axis=-1)                      # [T,E]
+    weights, experts = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch): E * mean(frac_tokens_e * mean_prob_e)
+    T = probs.shape[0]
+    one_hot = jax.nn.one_hot(experts[:, 0], m.num_experts, dtype=jnp.float32)
+    frac = jnp.mean(one_hot, axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(frac * mean_prob)
+    return weights, experts, aux
+
+
+def dispatch_indices(experts: jax.Array, num_experts: int, capacity: int):
+    """Starling partition-pack bookkeeping (the jnp oracle of the kernel).
+
+    experts [T*k] int32 destination partitions. Returns
+      sort_idx   [T*k] token-slot order, partition-major (the packed layout)
+      dest       [T*k] row in the [E*C (+1 overflow)] packed buffer
+      keep       [T*k] bool, False for capacity-dropped entries
+      offsets    [E]   start row of each partition  (the format's header)
+    """
+    n = experts.shape[0]
+    sort_idx = jnp.argsort(experts)                              # stable
+    sorted_e = experts[sort_idx]
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), experts,
+                                 num_segments=num_experts)
+    offsets = jnp.cumsum(counts) - counts                        # [E]
+    pos_in_e = jnp.arange(n, dtype=jnp.int32) - offsets[sorted_e]
+    keep = pos_in_e < capacity
+    dest = jnp.where(keep, sorted_e * capacity + pos_in_e,
+                     num_experts * capacity)                     # overflow row
+    return sort_idx, dest, keep, offsets
+
+
+def moe_apply(cfg, p, x, sh):
+    """Returns (x + moe_out, aux_loss).
+
+    Grouped dispatch: each batch row is a dispatch group (GShard grouping),
+    so the partition-pack (sort + scatter) runs *within* a data shard — no
+    cross-device motion until the expert einsum, which tiles over
+    (group@dp x expert@tp). This is the Starling C2 layout per group: a
+    contiguous partition-major buffer whose offsets are implicit in the fixed
+    capacity C.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    k = m.top_k
+    h = apply_norm(cfg.norm_kind, p["ln"], x, cfg.norm_eps)
+    weights, experts, aux = route(cfg, p, h)                     # [T,k]
+    C = expert_capacity(S, m.num_experts, k, m.capacity_factor)
+
+    if True:
+        w_g = weights.reshape(B, S * k)
+        e_g = experts.reshape(B, S * k).astype(jnp.int32)
+
+        def pack_indices(eg):                                     # [S*k]
+            return dispatch_indices(eg, m.num_experts, C)
+        sort_idx, dest, keep, _ = jax.vmap(pack_indices)(e_g)    # [B,...]
+        tok_of = sort_idx // k                                   # [B,S*k]
+        e_idx = dest // C                                        # [B,S*k]
+        # clip capacity overflow into a per-expert overflow slot (row C)
+        e_idx = jnp.where(keep, e_idx, jnp.take_along_axis(e_g, sort_idx, 1))
+        c_idx = jnp.where(keep, dest % C, C)
+
+        # pack partition-major per group straight into the 4D expert layout.
+        # Dispatch bookkeeping is done on d_model SLICES ([..., d@tp]) so the
+        # gather/scatter is tp-local; the ebuf constraint then reshards
+        # d->experts with a single all-to-all before the expert einsum.
+        hd = sh(h, "batch", None, "dispatch_embed")               # [B,S,d@tp]
+        gathered_in = jnp.take_along_axis(
+            hd, tok_of[..., None], axis=1)                        # [B,S*k,d@tp]
+        gathered_in = sh(gathered_in, "batch", None, "dispatch_embed")
+        buf = jnp.zeros((B, m.num_experts, C + 1, d), h.dtype)
+        buf = jax.vmap(lambda b, ei, ci, src: b.at[ei, ci].set(src))(
+            buf, e_idx, c_idx, gathered_in)
+        buf = sh(buf, "batch", None, None, "dispatch_embed")
+        if cfg.moe_impl == "a2a":
+            # token-moving EP: ALL-TO-ALL reshard (batch@dp, E) ->
+            # (batch full, E@dp); expert weights stay put (moe_e@dp) and
+            # their grads are fully local to the owning rank.
+            ebuf = sh(buf[:, :, :C], None, "act_experts", None, None)
+            g = jnp.einsum("becd,edf->becf", ebuf,
+                           p["w_gate"].astype(h.dtype))
+            u = jnp.einsum("becd,edf->becf", ebuf, p["w_up"].astype(h.dtype))
+            z = sh(swiglu(g, u), None, "act_experts", None, "act_mlp")
+            eout = jnp.einsum("becf,efd->becd", z,
+                              p["w_down"].astype(h.dtype))
+            eout = sh(eout, None, "act_experts", None, None)
+        else:
+            ebuf = sh(buf[:, :, :C], "batch", "act_experts", None, None)
+            # expert FFN tiles over (group@dp, expert@tp)
+            g = jnp.einsum("becd,edf->becf", ebuf,
+                           p["w_gate"].astype(h.dtype))
+            u = jnp.einsum("becd,edf->becf", ebuf, p["w_up"].astype(h.dtype))
+            z = sh(swiglu(g, u), "batch", "act_experts", None, None)
+            eout = jnp.einsum("becf,efd->becd", z,
+                              p["w_down"].astype(h.dtype))
+            eout = sh(eout, "batch", "act_experts", None, None)
+        # combine: reshard experts->d, then per-group range-reads on d-slices
+        rows = jnp.pad(eout, ((0, 0), (0, 0), (0, 1), (0, 0)))   # zero slot C
+        rows = sh(rows, "batch", None, None, "dispatch_embed")
+        back = jax.vmap(lambda r, ei, ci: r[ei, ci])(rows, e_idx, c_idx)
+        # rows are PARTITION-MAJOR (sorted) order: index weights accordingly
+        w_sorted = jnp.take_along_axis(w_g, sort_idx, axis=1)
+        back = back * jnp.where(keep, w_sorted, 0.0).astype(h.dtype)[..., None]
+        back = sh(back, "batch", None, "dispatch_embed")
+        out = jax.vmap(lambda bk, t: jax.ops.segment_sum(
+            bk, t, num_segments=S))(back, tok_of)                  # [B,S,d]
+
+    if m.num_shared:
+        # shared experts on the 3D residual (seq sharding preserved)
+        sp = p["shared"]
+        g = h @ sp["w_gate"].astype(h.dtype)
+        u = h @ sp["w_up"].astype(h.dtype)
+        z = sh(swiglu(g, u), "batch", None, "act_mlp")
+        out = out + z @ sp["w_down"].astype(h.dtype)
+
+    return x + sh(out, "batch", "seq", "act_embed"), aux

@@ -1,0 +1,344 @@
+"""Decoder blocks shared by the dense/MoE/VLM/audio architectures.
+
+Each block is (param-defs fn, apply fn) over plain pytrees. Caches are
+pytrees of the same kind; decode applies write-at-slot ring-buffer updates
+for windowed / chunked-local layers.
+
+Attention layer kinds:
+  full          causal full attention
+  window        sliding window (cfg.window)
+  chunked       llama4-style chunked-local (aligned chunks of cfg.chunked_local)
+  cross         whisper encoder-decoder cross attention (not causal, no rope)
+  bidir         encoder self attention
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.modules import (ParamSpec, apply_norm, gelu, norm_defs,
+                                  swiglu)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA family)
+# ---------------------------------------------------------------------------
+
+def _heads(cfg) -> tuple[int, int]:
+    """(q_heads, kv_heads) including TPU padding (see configs/base.py)."""
+    return (cfg.pad_q_heads or cfg.num_heads,
+            cfg.pad_kv_heads or cfg.num_kv_heads)
+
+
+def _kv_map(cfg):
+    """Static q-head -> kv-head index map honoring the UNPADDED grouping."""
+    import numpy as np
+    Hq, _ = _heads(cfg)
+    g = cfg.num_heads // max(cfg.num_kv_heads, 1)
+    idx = [min(h // g, cfg.num_kv_heads - 1) if h < cfg.num_heads else 0
+           for h in range(Hq)]
+    return np.asarray(idx, dtype=np.int32)
+
+
+def _head_mask(cfg):
+    import numpy as np
+    Hq, _ = _heads(cfg)
+    if Hq == cfg.num_heads:
+        return None
+    return np.asarray([1.0 if h < cfg.num_heads else 0.0 for h in range(Hq)],
+                      dtype=np.float32)
+
+
+def _expand_kv(cfg, k):
+    """kv [B,S,Hkv(padded),hd] -> per-q-head kv [B,S,Hq,hd]."""
+    Hq, Hkv = _heads(cfg)
+    if Hq == cfg.num_heads and cfg.num_heads // max(cfg.num_kv_heads, 1) == 1 \
+            and Hkv == cfg.num_kv_heads:
+        return k
+    return jnp.take(k, jnp.asarray(_kv_map(cfg)), axis=2)
+
+
+def attn_defs(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    Hq, Hkv = _heads(cfg)
+    return {
+        "ln": norm_defs(cfg.norm_kind, d),
+        "wq": ParamSpec((d, Hq * hd), ("embed", "heads_q")),
+        "wk": ParamSpec((d, Hkv * hd), ("embed", "heads_kv")),
+        "wv": ParamSpec((d, Hkv * hd), ("embed", "heads_kv")),
+        "wo": ParamSpec((Hq * hd, d), ("heads_q", "embed")),
+    }
+
+
+def attn_cache_defs(cfg, batch: int, cache_len: int, long: bool = False) -> dict:
+    hd = cfg.resolved_head_dim
+    _, Hkv = _heads(cfg)
+    seq_ax = "cache_seq_sharded" if long else "cache_seq"
+    axes = ("cache_batch", seq_ax, "cache_heads", None)
+    shp = (batch, cache_len, Hkv, hd)
+    return {"k": ParamSpec(shp, axes, init="zeros", dtype=cfg.compute_dtype),
+            "v": ParamSpec(shp, axes, init="zeros", dtype=cfg.compute_dtype)}
+
+
+def _qkv(cfg, p, x, sh, positions, mrope_positions=None, rope: bool = True):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    Hq, Hkv = _heads(cfg)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, Hq, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, Hkv, hd)
+    q = sh(q, "batch", "act_seq_q", "act_heads", None)
+    # k/v must be FULL-seq inside attention: without this they inherit the
+    # residual's seq@model sharding and every q-chunk pays a partial-score
+    # all-reduce (one gather per layer instead)
+    k = sh(k, "batch", None, None, None)
+    v = sh(v, "batch", None, None, None)
+    if rope and cfg.rope_theta > 0:
+        if cfg.mrope and mrope_positions is not None:
+            q = A.apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+            k = A.apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = A.apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+            k = A.apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def attn_apply(cfg, p, x, sh, *, positions, layer_kind: str = "full",
+               cache: dict | None = None, cache_len=None,
+               mrope_positions=None, kv_override=None):
+    """Returns (out, new_cache). Full-sequence mode when cache is None."""
+    B, S, d = x.shape
+    h = apply_norm(cfg.norm_kind, p["ln"], x, cfg.norm_eps)
+
+    if layer_kind == "cross":
+        hd = cfg.resolved_head_dim
+        Hq, Hkv = _heads(cfg)
+        q = (h @ p["wq"].astype(h.dtype)).reshape(B, S, Hq, hd)
+        enc = kv_override
+        k = (enc @ p["wk"].astype(h.dtype)).reshape(B, enc.shape[1], Hkv, hd)
+        v = (enc @ p["wv"].astype(h.dtype)).reshape(B, enc.shape[1], Hkv, hd)
+        o = A.chunked_attention(q, _expand_kv(cfg, k), _expand_kv(cfg, v),
+                                causal=False, chunk=cfg.attn_chunk)
+        out = o.reshape(B, S, -1) @ p["wo"].astype(h.dtype)
+        return x + sh(out, "batch", "seq", "act_embed"), cache
+
+    if cache is None:
+        q, k, v = _qkv(cfg, p, h, sh, positions, mrope_positions)
+        kr, vr = _expand_kv(cfg, k), _expand_kv(cfg, v)
+        window = cfg.window if layer_kind == "window" else 0
+        if layer_kind == "chunked":
+            o = _chunk_local_attention(cfg, q, kr, vr, positions)
+        else:
+            o = A.attention(q, kr, vr, impl=cfg.attn_impl,
+                            causal=(layer_kind != "bidir"), window=window,
+                            chunk=cfg.attn_chunk)
+        o = sh(o, "batch", "act_seq_q", "act_heads", None)
+        hm = _head_mask(cfg)
+        if hm is not None:
+            o = o * jnp.asarray(hm, o.dtype)[None, None, :, None]
+        out = o.reshape(B, S, -1) @ p["wo"].astype(h.dtype)
+        # full-seq kv (pre-repeat) so prefill can build a cache from it;
+        # train paths must drop this before scan ys to avoid materializing.
+        kv = {"k": k.astype(cfg.compute_dtype), "v": v.astype(cfg.compute_dtype)}
+        return x + sh(out, "batch", "seq", "act_embed"), kv
+
+    # ---- decode: single token against a cache ----
+    pos = cache_len                                            # scalar int32
+    q, k, v = _qkv(cfg, p, h, sh, positions, mrope_positions)
+    W = cache["k"].shape[1]
+    if layer_kind == "chunked":
+        slot = pos % cfg.chunked_local
+        valid = slot + 1
+    elif layer_kind == "window":
+        slot = pos % W
+        valid = jnp.minimum(pos + 1, W)
+    else:
+        slot = pos
+        valid = pos + 1
+    new_k = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    o = A.decode_attention(q, _expand_kv(cfg, new_k),
+                           _expand_kv(cfg, new_v), valid)
+    hm = _head_mask(cfg)
+    if hm is not None:
+        o = o * jnp.asarray(hm, o.dtype)[None, None, :, None]
+    out = o.reshape(B, S, -1) @ p["wo"].astype(h.dtype)
+    return x + sh(out, "batch", "seq", "act_embed"), {"k": new_k, "v": new_v}
+
+
+def _chunk_local_attention(cfg, q, k, v, positions):
+    """llama4 chunked-local: attend within aligned chunks of cfg.chunked_local."""
+    B, S, H, D = q.shape
+    C = cfg.chunked_local
+    if S <= C:
+        return A.attention(q, k, v, impl=cfg.attn_impl, causal=True,
+                           chunk=cfg.attn_chunk)
+    assert S % C == 0, (S, C)
+    n = S // C
+    qc = q.reshape(B, n, C, H, D).reshape(B * n, C, H, D)
+    kc = k.reshape(B, n, C, H, D).reshape(B * n, C, H, D)
+    vc = v.reshape(B, n, C, H, v.shape[-1]).reshape(B * n, C, H, v.shape[-1])
+    o = A.attention(qc, kc, vc, impl=cfg.attn_impl, causal=True,
+                    chunk=cfg.attn_chunk)
+    return o.reshape(B, S, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# MLA attention block (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    return {
+        "ln": norm_defs(cfg.norm_kind, d),
+        "wq": ParamSpec((d, H * (nope + rope_d)), ("embed", "heads_q")),
+        "w_dkv": ParamSpec((d, r + rope_d), ("embed", "kv_lora")),
+        "kv_ln": norm_defs("rms", r),
+        "w_uk": ParamSpec((r, H * nope), ("kv_lora", "heads_q")),
+        "w_uv": ParamSpec((r, H * vd), ("kv_lora", "heads_q")),
+        "wo": ParamSpec((H * vd, d), ("heads_q", "embed")),
+    }
+
+
+def mla_cache_defs(cfg, batch: int, cache_len: int, long: bool = False) -> dict:
+    seq_ax = "cache_seq_sharded" if long else "cache_seq"
+    return {
+        "ckv": ParamSpec((batch, cache_len, cfg.kv_lora_rank),
+                         ("cache_batch", seq_ax, None),
+                         init="zeros", dtype=cfg.compute_dtype),
+        "krope": ParamSpec((batch, cache_len, cfg.qk_rope_head_dim),
+                           ("cache_batch", seq_ax, None),
+                           init="zeros", dtype=cfg.compute_dtype),
+    }
+
+
+def _mla_qc(cfg, p, h, positions):
+    """Shared q / compressed-kv computation. Returns q_nope, q_rope, ckv, krope."""
+    B, S, _ = h.shape
+    H = cfg.num_heads
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    r = cfg.kv_lora_rank
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = A.apply_rope(q_rope, positions, cfg.rope_theta)
+    c = h @ p["w_dkv"].astype(h.dtype)                          # [B,S,r+rope]
+    ckv = apply_norm("rms", p["kv_ln"], c[..., :r], cfg.norm_eps)
+    krope = A.apply_rope(c[..., None, r:], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, ckv, krope
+
+
+def mla_apply(cfg, p, x, sh, *, positions, cache: dict | None = None,
+              cache_len=None, **_):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    h = apply_norm(cfg.norm_kind, p["ln"], x, cfg.norm_eps)
+    q_nope, q_rope, ckv, krope = _mla_qc(cfg, p, h, positions)
+
+    if cache is None:
+        # decompressed path: materialize per-head k/v (prefill & train).
+        # attention() scales by 1/sqrt(nope+rope) via k.shape[-1].
+        k_nope = (ckv @ p["w_uk"].astype(h.dtype)).reshape(B, S, H, nope)
+        v = (ckv @ p["w_uv"].astype(h.dtype)).reshape(B, S, H, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None], (B, S, H, rope_d))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        q = sh(q, "batch", "act_seq_q", "act_heads", None)
+        o = A.attention(q, k, v, impl=cfg.attn_impl, causal=True,
+                        chunk=cfg.attn_chunk)
+        out = o.reshape(B, S, -1) @ p["wo"].astype(h.dtype)
+        new_cache = {"ckv": ckv, "krope": krope}
+        return x + sh(out, "batch", "seq", "act_embed"), new_cache
+
+    # ---- decode with absorbed projections (cache stays compressed) ----
+    pos = cache_len
+    new_ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+    new_krope = jax.lax.dynamic_update_slice(
+        cache["krope"], krope.astype(cache["krope"].dtype), (0, pos, 0))
+    w_uk = p["w_uk"].astype(h.dtype).reshape(r, H, nope)
+    w_uv = p["w_uv"].astype(h.dtype).reshape(r, H, vd)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)           # [B,1,H,r]
+    s = (jnp.einsum("bqhr,bkr->bhqk", q_abs, new_ckv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhd,bkd->bhqk", q_rope, new_krope,
+                      preferred_element_type=jnp.float32)) * (
+        1.0 / jnp.sqrt(jnp.float32(nope + rope_d)))
+    Sc = new_ckv.shape[1]
+    valid = jnp.arange(Sc)[None, None, None, :] < (pos + 1)
+    s = jnp.where(valid, s, A.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(h.dtype)
+    o_c = jnp.einsum("bhqk,bkr->bqhr", pr, new_ckv)              # [B,1,H,r]
+    o = jnp.einsum("bqhr,rhd->bqhd", o_c, w_uv)
+    out = o.reshape(B, S, -1) @ p["wo"].astype(h.dtype)
+    return x + sh(out, "batch", "seq", "act_embed"), \
+        {"ckv": new_ckv, "krope": new_krope}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {"ln": norm_defs(cfg.norm_kind, d),
+                "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+                "w_up": ParamSpec((d, f), ("embed", "mlp")),
+                "w_down": ParamSpec((f, d), ("mlp", "embed"))}
+    return {"ln": norm_defs(cfg.norm_kind, d),
+            "w_up": ParamSpec((d, f), ("embed", "mlp")),
+            "b_up": ParamSpec((f,), ("mlp",), init="zeros"),
+            "w_down": ParamSpec((f, d), ("mlp", "embed")),
+            "b_down": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def mlp_apply(cfg, p, x, sh):
+    h = apply_norm(cfg.norm_kind, p["ln"], x, cfg.norm_eps)
+    if cfg.mlp_kind == "swiglu":
+        g = h @ p["w_gate"].astype(h.dtype)
+        u = h @ p["w_up"].astype(h.dtype)
+        z = sh(swiglu(g, u), "batch", None, "act_mlp")
+        out = z @ p["w_down"].astype(h.dtype)
+    else:
+        u = gelu(h @ p["w_up"].astype(h.dtype) + p["b_up"].astype(h.dtype))
+        u = sh(u, "batch", None, "act_mlp")
+        out = u @ p["w_down"].astype(h.dtype) + p["b_down"].astype(h.dtype)
+    return x + sh(out, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Generic decoder layer = attention block + mlp/moe block
+# ---------------------------------------------------------------------------
+
+def layer_defs(cfg, *, attn: str = "gqa", mlp: str = "mlp",
+               d_ff: int | None = None) -> dict:
+    from repro.models.moe import moe_defs
+    defs: dict[str, Any] = {}
+    defs["attn"] = mla_defs(cfg) if attn == "mla" else attn_defs(cfg)
+    defs["mlp"] = moe_defs(cfg) if mlp == "moe" else mlp_defs(cfg, d_ff)
+    return defs
+
+
+def layer_apply(cfg, p, x, sh, *, positions, attn="gqa", mlp="mlp",
+                layer_kind="full", cache=None, cache_len=None,
+                mrope_positions=None):
+    from repro.models.moe import moe_apply
+    fn = mla_apply if attn == "mla" else attn_apply
+    x, new_cache = fn(cfg, p["attn"], x, sh, positions=positions,
+                      layer_kind=layer_kind, cache=cache, cache_len=cache_len,
+                      mrope_positions=mrope_positions)
+    if mlp == "moe":
+        x, aux = moe_apply(cfg, p["mlp"], x, sh)
+    else:
+        x, aux = mlp_apply(cfg, p["mlp"], x, sh), 0.0
+    return x, new_cache, aux

@@ -1,0 +1,2 @@
+# Import submodules directly (repro.objectstore.store / .latency / .client);
+# keeping this empty avoids a store->stragglers->latency import cycle.

@@ -1,0 +1,103 @@
+"""Virtual-time store client: real bytes, simulated request timing.
+
+Workers exchange REAL data through the ObjectStore, but request *timing* is
+tracked in virtual seconds (sampled from the latency models + mitigation
+policies), so end-to-end query runs are exact in structure and cost yet fast
+in wall-clock. The coordinator's discrete-event scheduler (core/coordinator)
+composes these per-task virtual times into query latency.
+
+Parallel reads (§3.3): requests are scheduled onto `parallel_reads` lanes;
+each lane's next read starts when the lane frees AND the input object is
+available (producer virtual end + visibility lag).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.stragglers import StragglerConfig
+from repro.objectstore.latency import object_visibility_lag
+from repro.objectstore.store import ObjectStore
+
+
+@dataclasses.dataclass
+class ReadReq:
+    key: str
+    start: int | None = None
+    end: int | None = None
+    available_at: float = 0.0        # producer virtual end time
+    alt_key: str | None = None       # doublewrite fallback
+
+
+class StoreClient:
+    """One per worker-task; accumulates virtual time + request counts."""
+
+    def __init__(self, store: ObjectStore, policy: StragglerConfig,
+                 rng: np.random.Generator):
+        self.store = store
+        self.policy = policy
+        self.rng = rng
+        self.gets = 0
+        self.puts = 0
+
+    # ------------------------------------------------------------------ read
+    def _one_get(self, req: ReadReq, t_start: float, concurrency: int
+                 ) -> tuple[bytes, float]:
+        """Returns (data, completion_time)."""
+        avail = req.available_at
+        # visibility lag is PER OBJECT (all readers of a lagging key stall);
+        # doublewrite readers fall back to the twin -> min of the two lags
+        seed = self.store.config.seed
+        lag = object_visibility_lag(req.key, seed)
+        if req.alt_key is not None:
+            lag = min(lag, object_visibility_lag(req.alt_key, seed))
+        t0 = max(t_start, avail)
+        # poll until visible (polls are GETs that return 404 -> still billed)
+        polls = 0
+        tt = t0
+        while tt < avail + lag - 1e-12:
+            tt += 0.05                                   # poll interval
+            polls += 1
+        nbytes = self.store.size(req.key) if req.start is None \
+            else (req.end - (req.start or 0))
+        dur, nreq = self.policy.rsm.completion(
+            self.store.config.get_model, nbytes, concurrency, self.rng)
+        self.gets += nreq + polls
+        data = self.store.get(req.key, req.start, req.end)
+        return data, tt + dur
+
+    def read_many(self, reqs: list[ReadReq], now: float
+                  ) -> tuple[list[bytes], float]:
+        """Parallel reads on `parallel_reads` lanes. Returns (datas, end)."""
+        lanes = [now] * max(self.policy.parallel_reads, 1)
+        out: list[bytes] = []
+        end = now
+        conc = min(len(reqs), max(self.policy.parallel_reads, 1)) or 1
+        for i, req in enumerate(reqs):
+            lane = i % len(lanes)
+            data, done = self._one_get(req, lanes[lane], conc)
+            lanes[lane] = done
+            end = max(end, done)
+            out.append(data)
+        return out, end
+
+    # ----------------------------------------------------------------- write
+    def write(self, key: str, data: bytes, now: float, *,
+              if_none_match: bool = False) -> float:
+        """PUT with WSM (+doublewrite). Returns completion time."""
+        dur, nreq = self.policy.wsm.completion(
+            self.store.config.put_model, len(data), self.rng)
+        self.puts += nreq
+        wrote = self.store.put(key, data, if_none_match=if_none_match)
+        end = now + dur
+        if self.policy.doublewrite and wrote:
+            dur2, nreq2 = self.policy.wsm.completion(
+                self.store.config.put_model, len(data), self.rng)
+            self.puts += nreq2
+            self.store.put(key + ".dw", data, if_none_match=if_none_match)
+            end = max(end, now + dur2)                   # both in parallel
+        return end
+
+    def stats(self) -> dict:
+        return {"gets": self.gets, "puts": self.puts}

@@ -1,0 +1,111 @@
+"""Latency models calibrated to the paper's S3 measurements.
+
+The paper reports (Figs 3/5/6, §3.3, §5):
+  * 256KB GET: median 14 ms; heavy tail — without mitigation the 99.99th
+    percentile exceeds 1 s, occasional multi-second stalls;
+  * single-connection throughput ~150 MB/s from Lambda, per-invocation
+    aggregate saturating around 16 parallel reads (Fig 3);
+  * 100MB PUT: seconds-scale; p99 ~9 s without WSM, max > 20 s; most write
+    stragglers occur *after* the body is sent (S3-side processing);
+  * expected response model r = l + b/(t*c) with l=15 ms, t=150 MB/s.
+
+We model completion time = base latency (lognormal around the median)
++ size/throughput + a Pareto straggler tail hit with small probability.
+All draws come from a seeded Generator -> fully reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    name: str
+    base_median_s: float            # median first-byte latency
+    base_sigma: float               # lognormal sigma of the base latency
+    throughput_Bps: float           # per-connection streaming rate
+    straggler_prob: float           # probability a request stalls
+    straggler_scale_s: float        # Pareto scale (minimum stall)
+    straggler_alpha: float          # Pareto shape (smaller = heavier tail)
+    post_send_fraction: float = 0.0  # fraction of stall AFTER body sent (WSM)
+
+    def sample(self, nbytes: int, rng: np.random.Generator) -> float:
+        """One completion time in seconds."""
+        base = float(rng.lognormal(math.log(self.base_median_s),
+                                   self.base_sigma))
+        t = base + nbytes / self.throughput_Bps
+        if rng.random() < self.straggler_prob:
+            t += float(self.straggler_scale_s
+                       * (1.0 + rng.pareto(self.straggler_alpha)))
+        return t
+
+    def sample_phases(self, nbytes: int, rng: np.random.Generator
+                      ) -> tuple[float, float]:
+        """(send/stream phase, post-send server phase) — for write modeling.
+
+        The paper observes most write stalls happen after the client finished
+        sending (S3-side processing) — that is what WSM's second timeout
+        targets.
+        """
+        base = float(rng.lognormal(math.log(self.base_median_s),
+                                   self.base_sigma))
+        send = base + nbytes / self.throughput_Bps
+        post = 0.0
+        if rng.random() < self.straggler_prob:
+            stall = float(self.straggler_scale_s
+                          * (1.0 + rng.pareto(self.straggler_alpha)))
+            post = stall * self.post_send_fraction
+            send += stall * (1.0 - self.post_send_fraction)
+        return send, post
+
+    def expected(self, nbytes: int, concurrency: int = 1) -> float:
+        """The paper's model r = l + b/(t*c)."""
+        return self.base_median_s + nbytes / (self.throughput_Bps
+                                              * max(concurrency, 1))
+
+
+# --- calibrated to the paper's figures ---
+# GET: 14ms median for 256KB => base ~= 14ms - 256KB/150MBps (~1.7ms) ~= 12ms.
+# tail: ~0.3% of reads straggle (the paper's RSM triggers in 0.3% of reads);
+# Pareto(alpha=1.1, scale=0.35s) puts p99.99 past 1s, max in the seconds.
+# calibration: p99.99 ~ 1.0-1.1s (Fig 5 no-RSM), max(52k) ~ 1.8-2.5s,
+# trigger rate with RSM factor 4 ~ 0.3-0.4%
+S3_GET_MODEL = LatencyModel(
+    name="s3_get", base_median_s=0.012, base_sigma=0.25,
+    throughput_Bps=150e6, straggler_prob=0.004,
+    straggler_scale_s=0.30, straggler_alpha=3.0)
+
+# PUT of 100MB: send ~100MB/150MBps = 0.67s + base; stragglers much more
+# common (the paper's WSM fires on 31% of writes) and mostly post-send.
+# calibration: 100MB PUT p50 ~ 0.7s, p99 ~ 9s (Fig 6 no-WSM),
+# max(10k) ~ 20-25s; WSM fires on ~31% of writes
+S3_PUT_MODEL = LatencyModel(
+    name="s3_put", base_median_s=0.030, base_sigma=0.35,
+    throughput_Bps=150e6, straggler_prob=0.31,
+    straggler_scale_s=2.0, straggler_alpha=2.5,
+    post_send_fraction=0.85)
+
+# visibility lag (read-after-write): rare but can reach seconds (§3.3.1).
+# Lag is a PER-OBJECT property: every reader of a lagging object stalls —
+# that coupling is why doublewrite (min over two independent keys) pays.
+VISIBILITY_LAG_PROB = 0.02
+VISIBILITY_LAG_MEDIAN_S = 0.8
+VISIBILITY_LAG_SIGMA = 0.8
+
+
+def sample_visibility_lag(rng: np.random.Generator) -> float:
+    if rng.random() < VISIBILITY_LAG_PROB:
+        return float(rng.lognormal(math.log(VISIBILITY_LAG_MEDIAN_S),
+                                   VISIBILITY_LAG_SIGMA))
+    return 0.0
+
+
+def object_visibility_lag(key: str, seed: int = 0) -> float:
+    """Deterministic per-object lag (stable across all readers)."""
+    import zlib
+    rng = np.random.default_rng(zlib.crc32(key.encode()) ^ (seed * 2654435761
+                                                            % 2 ** 31))
+    return sample_visibility_lag(rng)

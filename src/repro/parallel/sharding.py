@@ -1,0 +1,189 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Model code names tensor dims with logical axes; rules map logical names to
+mesh axes. ``logical_to_sharding`` validates divisibility and *drops* mesh
+axes that do not divide a dim instead of failing, so one rule set serves all
+10 assigned architectures (e.g. smollm's 9 heads on a 16-way model axis fall
+back to replication).
+
+Default layout = FSDP over ("pod","data") x TP over "model":
+  * params: "embed"-like dims sharded over fsdp axes, "mlp"/"heads"/"vocab"
+    dims over the model axis, experts over the model axis (EP == TP axis);
+  * activations: batch over fsdp axes, heads/mlp over model;
+  * long-context KV caches: sequence over fsdp (+ model when batch*heads
+    cannot use it).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes). None = replicate.
+# "fsdp" and "tp" are resolved against the mesh's actual axis names.
+DEFAULT_RULES: dict[str, Any] = {
+    # parameter dims
+    "embed": "fsdp",           # FSDP shard dim of most weights
+    "vocab": "tp",
+    "heads_q": "tp",           # fused q-proj out dim (nH*hd)
+    "heads_kv": "tp",
+    "mlp": "tp",
+    "experts": "tp",           # expert-parallel == model axis
+    "expert_mlp": None,
+    # MoE weight dims (dedicated names so moe_impl can remap them):
+    #   gspmd (default): experts@tp, d@fsdp, f unsharded — weights FSDP'd,
+    #     re-gathered per layer per microbatch;
+    #   a2a: experts@dp, d unsharded, f@tp — weights STATIONARY, tokens move
+    #     (all-to-all), expert grads fully local (Starling C3 in tensors).
+    "moe_e": "tp",
+    "moe_d": "fsdp",
+    "moe_f": None,
+    "layers": None,
+    "kv_lora": None,
+    "conv": None,
+    "state": None,
+    # activation dims. "seq" is the RESIDUAL-STREAM sequence dim: sharded
+    # over the model axis (Megatron-style sequence parallelism) so the
+    # per-layer carries saved by the remat'd layer scan are 1/tp-sized.
+    # Internal tensors (q/k/v, mlp hidden) use None for seq and shard their
+    # head/mlp dim instead; GSPMD inserts the SP all-gather/reduce-scatter
+    # pair at the layer boundaries.
+    "batch": "dp",             # ("pod","data")
+    "seq": "tp",
+    "act_embed": None,
+    "act_heads": "tp",
+    "act_mlp": "tp",
+    "act_experts": "tp",
+    # fallback for archs whose head count does not divide the model axis
+    # (llama4: 40H, smollm: 9H): shard attention's q-sequence dim instead.
+    # Low priority (see _PRIORITY): heads get first claim on "model".
+    "act_seq_q": "tp",
+    # MoE dispatch bookkeeping (gather/scatter token<->expert buffers) runs
+    # on d_model SLICES so it is tp-local; one all-to-all reshards d->experts
+    # before the expert einsum (see models/moe.py).
+    "dispatch_embed": "tp",
+    # flattened (batch*seq) token dim (router / shared-expert paths)
+    "tokens": "dp_tp",
+    # kv-cache dims. Sequence-sharded KV over the model axis is the default
+    # serving layout: kv-head counts (1-8) rarely divide a 16-way model axis,
+    # while 32k cache seqs always do. Decode attention then reduces partial
+    # softmax stats over "model" (an all-reduce GSPMD inserts).
+    "cache_batch": "dp",
+    "cache_seq": "tp",
+    "cache_seq_sharded": "dp_tp",  # long-context: shard cache seq over all axes
+    "cache_heads": None,
+}
+
+
+def effective_rules(cfg, rules=None) -> dict:
+    """Config-dependent rule overrides (single source of truth for both
+    build_model's activation constraints and the launcher's state shardings).
+    """
+    out = dict(rules or {})
+    if getattr(cfg, "moe", None) is not None and             getattr(cfg, "moe_impl", "") == "a2a":
+        out.update({"moe_e": "dp", "moe_d": None, "moe_f": "tp",
+                    "act_experts": "dp"})
+    return out
+
+
+def resolve_axes(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    """Map the abstract fsdp/tp/dp groups onto this mesh's axis names."""
+    names = mesh.axis_names
+    tp = ("model",) if "model" in names else ()
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    return {
+        "fsdp": dp,
+        "tp": tp,
+        "dp": dp,
+        "dp_tp": dp + tp,
+    }
+
+
+def _mesh_axes_for(logical: str | None, rules: Mapping[str, Any],
+                   groups: Mapping[str, tuple[str, ...]]) -> tuple[str, ...]:
+    if logical is None:
+        return ()
+    r = rules.get(logical, None)
+    if r is None:
+        return ()
+    if isinstance(r, str):
+        if r in groups:
+            return groups[r]
+        return (r,)
+    out: list[str] = []
+    for a in r:
+        out.extend(groups.get(a, (a,)))
+    return tuple(out)
+
+
+# logical axes with priority > 0 only claim mesh axes left over after the
+# default (priority 0) pass — e.g. act_seq_q yields "model" to act_heads.
+_PRIORITY: dict[str, int] = {"act_seq_q": 10}
+
+
+def logical_to_spec(shape: Sequence[int], logical_axes: Sequence[str | None],
+                    mesh: Mesh, rules: Mapping[str, Any] | None = None) -> P:
+    """PartitionSpec for `shape`, dropping axes that don't divide dims.
+
+    Mesh axes are assigned greedily per dim in priority order (then
+    left-to-right); an axis already used by another dim is skipped
+    (PartitionSpec axes must be unique).
+    """
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    groups = resolve_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set[str] = set()
+    spec: list[Any] = [None] * len(shape)
+    order = sorted(range(len(shape)),
+                   key=lambda i: (_PRIORITY.get(logical_axes[i] or "", 0), i))
+    for i in order:
+        dim, logical = shape[i], logical_axes[i]
+        axes = [a for a in _mesh_axes_for(logical, rules, groups)
+                if a not in used]
+        # greedily keep the prefix of axes whose product divides the dim
+        keep: list[str] = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * sizes[a]) == 0:
+                keep.append(a)
+                prod *= sizes[a]
+        used.update(keep)
+        if not keep:
+            spec[i] = None
+        elif len(keep) == 1:
+            spec[i] = keep[0]
+        else:
+            spec[i] = tuple(keep)
+    return P(*spec)
+
+
+def logical_to_sharding(shape, logical_axes, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(shape, logical_axes, mesh, rules))
+
+
+def param_shardings(defs, mesh: Mesh, rules=None):
+    """NamedSharding tree matching a ParamSpec tree."""
+    from repro.models.modules import is_spec
+    return jax.tree.map(
+        lambda s: logical_to_sharding(s.shape, s.logical_axes, mesh, rules),
+        defs, is_leaf=is_spec)
+
+
+def bytes_per_device(defs, mesh: Mesh, rules=None) -> int:
+    """Estimated parameter bytes per device under the rules (for napkin math)."""
+    import numpy as np
+    from repro.models.modules import is_spec
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0
+    for spec in jax.tree.leaves(defs, is_leaf=is_spec):
+        p = logical_to_spec(spec.shape, spec.logical_axes, mesh, rules)
+        shards = 1
+        for entry in p:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                shards *= sizes[a]
+        total += int(np.prod(spec.shape)) * jax.numpy.dtype(spec.dtype).itemsize // shards
+    return total

@@ -1,0 +1,198 @@
+"""Columnar tables with ORC-like segment serialization.
+
+A Table is a dict of equal-length columns:
+  * numeric: np.int64 / np.float64 / np.int32 (dates = days since epoch)
+  * low-cardinality strings: DictColumn (u32 codes + dictionary), the
+    paper's §3.2 dictionary encoding.
+
+Serialization produces ORC-like *column segments* with min/max statistics,
+so scans can prune columns (projection pushdown) and skip segments
+(predicate pushdown on stats) — §3.1. The same serializer produces shuffle
+partition payloads for core/format.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+_U64 = struct.Struct("<Q")
+_DTYPES = {0: np.dtype("<i8"), 1: np.dtype("<f8"), 2: np.dtype("<i4"),
+           3: np.dtype("<u4"), 4: np.dtype("<f4")}
+_DTYPE_CODES = {v: k for k, v in _DTYPES.items()}
+
+
+@dataclasses.dataclass
+class DictColumn:
+    codes: np.ndarray                  # u32
+    values: list[bytes]                # code -> string
+
+    def __len__(self):
+        return len(self.codes)
+
+    def take(self, idx):
+        return DictColumn(self.codes[idx], self.values)
+
+    def decode(self) -> list[bytes]:
+        return [self.values[c] for c in self.codes]
+
+    @staticmethod
+    def from_strings(strings: list[bytes]) -> "DictColumn":
+        vals = sorted(set(strings))
+        lut = {v: i for i, v in enumerate(vals)}
+        codes = np.asarray([lut[s] for s in strings], np.uint32)
+        return DictColumn(codes, vals)
+
+    def code_of(self, value: bytes) -> int:
+        try:
+            return self.values.index(value)
+        except ValueError:
+            return -1
+
+
+class Table:
+    def __init__(self, cols: dict):
+        self.cols = cols
+
+    def __len__(self):
+        for c in self.cols.values():
+            return len(c)
+        return 0
+
+    def __getitem__(self, name):
+        return self.cols[name]
+
+    def column_names(self):
+        return list(self.cols)
+
+    def project(self, names) -> "Table":
+        return Table({n: self.cols[n] for n in names})
+
+    def take(self, idx) -> "Table":
+        return Table({n: (c.take(idx) if isinstance(c, DictColumn)
+                          else c[idx]) for n, c in self.cols.items()})
+
+    def filter(self, mask: np.ndarray) -> "Table":
+        idx = np.nonzero(np.asarray(mask))[0]
+        return self.take(idx)
+
+    def with_column(self, name, col) -> "Table":
+        d = dict(self.cols)
+        d[name] = col
+        return Table(d)
+
+    @staticmethod
+    def concat(tables: list["Table"]) -> "Table":
+        tables = [t for t in tables if len(t)]
+        if not tables:
+            return Table({})
+        names = tables[0].column_names()
+        out = {}
+        for n in names:
+            c0 = tables[0][n]
+            if isinstance(c0, DictColumn):
+                # merge dictionaries
+                vals = sorted({v for t in tables for v in t[n].values})
+                lut = {v: i for i, v in enumerate(vals)}
+                codes = np.concatenate([
+                    np.asarray([lut[t[n].values[c]] for c in t[n].codes],
+                               np.uint32) for t in tables])
+                out[n] = DictColumn(codes, vals)
+            else:
+                out[n] = np.concatenate([t[n] for t in tables])
+        return Table(out)
+
+
+# ---------------------------------------------------------------------------
+# serialization (column segments with stats)
+# ---------------------------------------------------------------------------
+
+def serialize_table(t: Table) -> bytes:
+    """[ncols u64] then per column:
+    [name_len u64][name][kind u8][dtype u8][nrows u64][min f64][max f64]
+    [payload] — DictColumn payload embeds its dictionary."""
+    out = bytearray()
+    out += _U64.pack(len(t.cols))
+    for name, col in t.cols.items():
+        nb = name.encode()
+        out += _U64.pack(len(nb))
+        out += nb
+        if isinstance(col, DictColumn):
+            out += bytes([1, _DTYPE_CODES[np.dtype("<u4")]])
+            out += _U64.pack(len(col))
+            lo = float(col.codes.min()) if len(col) else 0.0
+            hi = float(col.codes.max()) if len(col) else 0.0
+            out += struct.pack("<dd", lo, hi)
+            d = bytearray()
+            d += _U64.pack(len(col.values))
+            for v in col.values:
+                d += _U64.pack(len(v))
+                d += v
+            out += _U64.pack(len(d))
+            out += d
+            out += col.codes.astype("<u4").tobytes()
+        else:
+            arr = np.asarray(col)
+            dt = arr.dtype.newbyteorder("<")
+            out += bytes([0, _DTYPE_CODES[np.dtype(dt)]])
+            out += _U64.pack(len(arr))
+            lo = float(arr.min()) if len(arr) else 0.0
+            hi = float(arr.max()) if len(arr) else 0.0
+            out += struct.pack("<dd", lo, hi)
+            out += arr.astype(dt).tobytes()
+    return bytes(out)
+
+
+def read_stats(data: bytes) -> dict:
+    """Column min/max stats without decoding payloads (segment skipping)."""
+    stats = {}
+    (ncols,) = _U64.unpack_from(data, 0)
+    pos = 8
+    for _ in range(ncols):
+        (nl,) = _U64.unpack_from(data, pos); pos += 8
+        name = data[pos:pos + nl].decode(); pos += nl
+        kind, dt = data[pos], data[pos + 1]; pos += 2
+        (n,) = _U64.unpack_from(data, pos); pos += 8
+        lo, hi = struct.unpack_from("<dd", data, pos); pos += 16
+        stats[name] = (lo, hi)
+        if kind == 1:
+            (dlen,) = _U64.unpack_from(data, pos); pos += 8 + dlen
+            pos += n * 4
+        else:
+            pos += n * _DTYPES[dt].itemsize
+    return stats
+
+
+def deserialize_table(data: bytes, columns: list[str] | None = None) -> Table:
+    """Column-pruned decode: only `columns` are materialized."""
+    cols: dict = {}
+    (ncols,) = _U64.unpack_from(data, 0)
+    pos = 8
+    for _ in range(ncols):
+        (nl,) = _U64.unpack_from(data, pos); pos += 8
+        name = data[pos:pos + nl].decode(); pos += nl
+        kind, dtc = data[pos], data[pos + 1]; pos += 2
+        (n,) = _U64.unpack_from(data, pos); pos += 8
+        pos += 16                                      # stats
+        want = columns is None or name in columns
+        if kind == 1:
+            (dlen,) = _U64.unpack_from(data, pos); pos += 8
+            if want:
+                dpos = pos
+                (nv,) = _U64.unpack_from(data, dpos); dpos += 8
+                vals = []
+                for _ in range(nv):
+                    (vl,) = _U64.unpack_from(data, dpos); dpos += 8
+                    vals.append(bytes(data[dpos:dpos + vl])); dpos += vl
+            pos += dlen
+            if want:
+                codes = np.frombuffer(data, "<u4", n, pos).copy()
+                cols[name] = DictColumn(codes, vals)
+            pos += n * 4
+        else:
+            dt = _DTYPES[dtc]
+            if want:
+                cols[name] = np.frombuffer(data, dt, n, pos).copy()
+            pos += n * dt.itemsize
+    return Table(cols)

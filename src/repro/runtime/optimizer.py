@@ -1,0 +1,147 @@
+"""Optimizers from scratch (optax is not available in this environment).
+
+AdamW: fp32 moments shaped like the parameter (sharded identically).
+Adafactor: factored fp32 second moments for ndim>=2 params (row/col), full
+second moment for vectors; no first moment by default — the choice that lets
+llama4-maverick-400b train_4k fit 256 x 16GB chips (see DESIGN.md).
+
+State is declared as ParamSpec trees so the sharding machinery used for
+parameters applies unchanged to optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import ParamSpec, is_spec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    state_defs: Callable[[PyTree], PyTree]      # ParamSpec tree -> ParamSpec tree
+    init: Callable[[PyTree], PyTree]            # params -> state
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    # (grads, state, params, step) -> (new_params, new_state)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+
+    def state_defs(param_defs):
+        f32 = lambda s: ParamSpec(s.shape, s.logical_axes, "zeros", jnp.float32)
+        return {"m": _tmap(f32, param_defs), "v": _tmap(f32, param_defs)}
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step_ = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", state_defs, init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no momentum)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: float = 1e-4, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+
+    def _factored(spec_or_arr) -> bool:
+        return len(spec_or_arr.shape) >= 2
+
+    def state_defs(param_defs):
+        def per(s: ParamSpec):
+            if _factored(s):
+                return {
+                    "vr": ParamSpec(s.shape[:-1], s.logical_axes[:-1],
+                                    "zeros", jnp.float32),
+                    "vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                    s.logical_axes[:-2] + s.logical_axes[-1:],
+                                    "zeros", jnp.float32)}
+            return {"v": ParamSpec(s.shape, s.logical_axes, "zeros", jnp.float32)}
+        return {"f": _tmap(per, param_defs)}
+
+    def init(params):
+        def per(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(per, params)}
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(r[..., None] * vc[..., None, :]
+                                      + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        out = jax.tree.map(
+            upd, grads, state["f"], params,
+            is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x))
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"f": new_s}
+
+    return Optimizer("adafactor", state_defs, init, update)
+
+
+def make_optimizer(name: str, lr: float = 1e-4, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,125 @@
+"""Property tests: partitioned object format (§3.2), shuffle cost model
+(§4.2), straggler policies (§5), table serialization."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import format as FMT
+from repro.core.shuffle import (choose_strategy, combiner_assignment,
+                                multi_stage, single_stage)
+from repro.core.stragglers import RSMPolicy, WSMPolicy
+from repro.objectstore.latency import S3_GET_MODEL, S3_PUT_MODEL
+from repro.relational.table import (DictColumn, Table, deserialize_table,
+                                    read_stats, serialize_table)
+
+
+# --------------------------------------------------------------- format §3.2
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.binary(min_size=0, max_size=200), min_size=1, max_size=16),
+       st.binary(min_size=0, max_size=64))
+def test_partitioned_format_roundtrip(parts, dictionary):
+    """Any partition (or contiguous run) is recoverable with TWO range
+    reads: header, then [start, end)."""
+    obj = FMT.write_partitioned(parts, dictionary)
+    n = len(parts)
+    header = obj[:FMT.header_size(n)]
+    ends, dict_len, data_start = FMT.parse_header(header, n)
+    assert dict_len == len(dictionary)
+    for i in range(n):
+        lo, hi = FMT.partition_range(ends, data_start, i)
+        assert obj[lo:hi] == parts[i]
+    # contiguous runs cost the same two reads
+    for i in range(n):
+        for j in range(i, n):
+            lo, hi = FMT.partition_range(ends, data_start, i, j)
+            assert obj[lo:hi] == b"".join(parts[i:j + 1])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_combiner_assignment_covers_everything(a, b):
+    """Every (partition, file) pair is read by exactly one combiner."""
+    s, r = 4 * b, 4 * a
+    plan = multi_stage(s, r, 1.0 / a, 1.0 / b)
+    seen = np.zeros((r, s), dtype=int)
+    for spec in combiner_assignment(plan):
+        p0, p1 = spec["partitions"]
+        f0, f1 = spec["files"]
+        seen[p0:p1, f0:f1] += 1
+    assert (seen == 1).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 5000), st.integers(2, 1500))
+def test_choose_strategy_never_worse_than_single(s, r):
+    plan = choose_strategy(s, r)
+    assert plan.request_cost() <= single_stage(s, r).request_cost() + 1e-12
+
+
+def test_paper_42_numbers():
+    assert single_stage(5120, 1280).reads() == 2 * 5120 * 1280
+    ms = multi_stage(5120, 1280, 1 / 20, 1 / 64)
+    assert ms.combiners == 1280
+    assert ms.reads() == 2 * (5120 * 20 + 1280 * 64)
+
+
+# ------------------------------------------------------------ stragglers §5
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_rsm_never_hurts_much_and_bounds_tail(seed):
+    """With duplicates, completion <= timeout + fresh sample; and the mean
+    over many draws does not regress."""
+    rng1 = np.random.default_rng(seed)
+    rng2 = np.random.default_rng(seed)
+    on = RSMPolicy(enabled=True)
+    off = RSMPolicy(enabled=False)
+    t_on = [on.completion(S3_GET_MODEL, 262144, 16, rng1)[0]
+            for _ in range(400)]
+    t_off = [off.completion(S3_GET_MODEL, 262144, 16, rng2)[0]
+             for _ in range(400)]
+    assert np.mean(t_on) <= np.mean(t_off) + 0.002
+    assert max(t_on) <= max(t_off) + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_wsm_two_timers_dominate_single(seed):
+    """full WSM (two timers) stochastically dominates single-timeout at the
+    tail (p99 over a common random stream)."""
+    def run(mode):
+        rng = np.random.default_rng(seed)
+        pol = WSMPolicy(enabled=(mode != "off"),
+                        post_send_timer=(mode == "full"))
+        return np.asarray([pol.completion(S3_PUT_MODEL, 100 << 20, rng)[0]
+                           for _ in range(600)])
+    p99_off = np.percentile(run("off"), 99)
+    p99_single = np.percentile(run("single"), 99)
+    p99_full = np.percentile(run("full"), 99)
+    assert p99_full <= p99_off + 1e-9
+    assert p99_full <= p99_single + 0.75      # noise tolerance
+
+
+# -------------------------------------------------------- table round trips
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 200), st.integers(0, 2 ** 31 - 1))
+def test_table_serialization_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    t = Table({
+        "a": rng.integers(-100, 100, n).astype(np.int64),
+        "b": rng.normal(size=n),
+        "c": DictColumn(rng.integers(0, 3, n).astype(np.uint32),
+                        [b"x", b"y", b"z"]),
+    })
+    data = serialize_table(t)
+    back = deserialize_table(data)
+    np.testing.assert_array_equal(back["a"], t["a"])
+    np.testing.assert_allclose(back["b"], t["b"])
+    np.testing.assert_array_equal(back["c"].codes, t["c"].codes)
+    assert back["c"].values == t["c"].values
+    # column pruning decodes only what's asked
+    only_a = deserialize_table(data, ["a"])
+    assert only_a.column_names() == ["a"] or n == 0
+    # stats header readable without decode
+    if n:
+        stats = read_stats(data)
+        assert stats["a"] == (t["a"].min(), t["a"].max())

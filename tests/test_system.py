@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the paper's system (Pillar A + B glue).
+
+Deeper scenario tests live in test_query_engine.py (distributed vs oracle),
+test_runtime.py (fault tolerance), test_smoke_archs.py (per-arch steps),
+test_kernel_*.py (Pallas vs oracles). This module covers the cross-cutting
+behaviours the paper leads with.
+"""
+import numpy as np
+
+from repro.core.engine import make_engine, oracle, run_query
+from repro.core.stragglers import StragglerConfig
+from repro.objectstore.store import ObjectStore, StoreConfig
+
+
+def test_pay_per_query_accounting():
+    """Cost = Lambda GB-s + request costs; idle time costs nothing but the
+    coordinator (the paper's core economic claim)."""
+    coord, _ = make_engine(sf=0.002, seed=1)
+    r1 = run_query(coord, "q6")
+    assert r1.cost.lambda_cost > 0 and r1.cost.s3_cost > 0
+    # another identical query costs about the same — no idle-time charges
+    coord2, _ = make_engine(sf=0.002, seed=1)
+    r2 = run_query(coord2, "q6")
+    assert abs(r1.cost.total - r2.cost.total) / r1.cost.total < 0.5
+
+
+def test_workers_share_nothing_but_the_store():
+    """All inter-task bytes flow through the object store: the store's PUT
+    accounting covers every stage's output."""
+    coord, _ = make_engine(sf=0.002, seed=2)
+    store = coord.store
+    puts_before = store.stats.puts
+    res = run_query(coord, "q12", {"join": 4})
+    assert store.stats.puts > puts_before
+    # every non-final stage produced objects under q/<query>/<stage>/
+    keys = [k for k in store.keys() if k.startswith("q/q12/")]
+    stages = {k.split("/")[2] for k in keys}
+    assert {"scan_li", "scan_ord", "join", "final"} <= stages
+
+
+def test_write_once_conditional_put():
+    store = ObjectStore(StoreConfig(simulate_visibility_lag=False))
+    assert store.put("k", b"first", if_none_match=True)
+    assert not store.put("k", b"second", if_none_match=True)
+    assert store.get("k") == b"first"
+    # range reads
+    store.put("r", bytes(range(10)))
+    assert store.get("r", 2, 5) == bytes([2, 3, 4])
+
+
+def test_more_tasks_do_not_change_results():
+    """Tunable parallelism (§4.3) is semantically free."""
+    coord, tables = make_engine(sf=0.002, seed=4)
+    exp = oracle("q12", tables)
+    for nt in (2, 8, 32):
+        res = run_query(coord, "q12", {"join": nt})
+        assert len(res.result) == len(exp)
+        got = np.sort(np.asarray(res.result["high_line_count"]))
+        want = np.sort(np.asarray(exp["high_line_count"]))
+        np.testing.assert_allclose(got, want)
+
+
+def test_pipelining_reduces_latency_on_average():
+    """§4.4: pipelined stages start earlier; over seeds the mean improves."""
+    lat_on, lat_off = [], []
+    for seed in range(4):
+        c1, _ = make_engine(sf=0.002, seed=50 + seed,
+                            policy=StragglerConfig(pipelining=True))
+        c2, _ = make_engine(sf=0.002, seed=50 + seed,
+                            policy=StragglerConfig(pipelining=False))
+        lat_on.append(run_query(c1, "q12", {"join": 4}).latency_s)
+        lat_off.append(run_query(c2, "q12", {"join": 4}).latency_s)
+    assert np.mean(lat_on) <= np.mean(lat_off) * 1.05
