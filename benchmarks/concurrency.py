@@ -1,28 +1,39 @@
-"""Fig 13: concurrent Q12 streams. The shared invocation limit (and the
-coordinator's own fan-out capacity) bound aggregate throughput."""
+"""Fig 13: concurrent Q12 streams through ONE shared invocation-slot pool.
+
+The event-driven coordinator's ``run_queries`` schedules every stream's
+tasks against the same account-level parallel-invocation limit (§4.3/§6.5),
+so contention emerges from the slot heap itself instead of the old
+budget-splitting approximation (max_parallel // users plus a fudge factor).
+Throughput levels off as the streams saturate the invocation limit.
+
+The paper's account limit is 1000 concurrent invocations against queries of
+hundreds of tasks; at our scaled-down task counts (~40 peak per stream) the
+limit is scaled by the same ~16x so that it actually binds as users grow —
+with LIMIT=1000 every stream would schedule as if alone and the "leveling
+off" would be pure straggler noise."""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core.engine import make_engine, run_query
+from repro.core.engine import make_engine
+from repro.relational.tpch import QUERIES
 
-LIMIT = 1000                      # account-level parallel invocations
+LIMIT = 64                        # scaled account-level parallel invocations
 
 
 def main(quick: bool = False):
     sf = 0.002 if quick else 0.005
     for users in ([1, 4] if quick else [1, 2, 4, 8, 16]):
-        # each user's query sees 1/users of the invocation budget, plus a
-        # coordinator fan-out penalty per concurrent stream (§6.5)
-        coord, _ = make_engine(sf=sf, seed=users,
-                               max_parallel=max(LIMIT // users, 4),
+        coord, _ = make_engine(sf=sf, seed=users, max_parallel=LIMIT,
                                target_bytes=1 << 20)
-        coord_overhead = 1.0 + 0.02 * (users - 1)
-        res = run_query(coord, "q12", {"join": 8})
-        lat = res.latency_s * coord_overhead
-        qph = users * 3600.0 / lat
+        plans = [QUERIES["q12"]({"join": 16}) for _ in range(users)]
+        arrivals = [0.0] * users
+        results = coord.run_queries(plans, arrival_times=arrivals)
+        makespan = max(a + r.latency_s for a, r in zip(arrivals, results))
+        mean_lat = sum(r.latency_s for r in results) / users
+        qph = users * 3600.0 / makespan
         emit(f"fig13_users{users}_qph", qph,
-             f"latency/user={lat:.2f}s; throughput levels off near the "
-             "invocation limit")
+             f"latency/user={mean_lat:.2f}s; makespan={makespan:.2f}s; "
+             "throughput levels off near the invocation limit")
 
 
 if __name__ == "__main__":

@@ -14,8 +14,11 @@ def run_all(sf: float = 0.01, repeats: int = 3, seed: int = 0):
     for q in sorted(QUERIES):
         lats, costs, core_s = [], [], []
         for r in range(repeats):
+            # virtual latency is executor-width independent; 8 threads just
+            # shrink the benchmark's own wall-clock
             coord, _ = make_engine(sf=sf, seed=seed + r,
-                                   target_bytes=1 << 20)
+                                   target_bytes=1 << 20,
+                                   executor_workers=8)
             res = run_query(coord, q)
             lats.append(res.latency_s)
             costs.append(res.cost.total)

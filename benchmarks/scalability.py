@@ -9,7 +9,8 @@ QS = ["q1", "q3", "q6", "q12"]
 
 
 def _run(sf, ntasks=None, shuffle=None, seed=0):
-    coord, _ = make_engine(sf=sf, seed=seed, target_bytes=1 << 20)
+    coord, _ = make_engine(sf=sf, seed=seed, target_bytes=1 << 20,
+                           executor_workers=8)
     out = {}
     for q in QS:
         kw = {}

@@ -1,35 +1,83 @@
-"""Coordinator (paper §2.3, §4.3, §4.4): schedules the task DAG.
+"""Coordinator (paper §2.3, §4.3, §4.4, §5): event-driven task scheduler.
 
-Discrete-event scheduling in virtual time over real task executions:
-  * invocation-limit: at most `max_parallel` concurrent workers (§4.3) —
-    a slot heap; a task's virtual start = max(stage ready, slot free);
-  * pipelining (§4.4): a consuming stage becomes ready when
-    `pipeline_fraction` of each producer finished (reads of late inputs
-    still wait on the producers' actual end times via per-input avails);
-  * multi-stage shuffle (§4.2): a `shuffle: {"strategy": "multi"}` join
-    inserts combiner tasks per core/shuffle.py;
-  * backup tasks (§5, power-of-two-choices at worker granularity): a task
-    running longer than `backup_factor x stage median` is duplicated; the
-    first writer wins (the store's conditional PUT), completion is the min.
+A single discrete-event loop drives every query: a priority queue of
+``(virtual_time, kind, run, stage, task)`` entries replaces the per-stage
+serial loop of the original implementation. Scheduling decisions are events:
+
+  * ``STAGE_READY`` — fired when every dependency has completed its
+    pipelining quota (§4.4: ``pipeline_fraction`` of the producer's tasks;
+    reads of late inputs still wait on the producers' actual end times via
+    per-input avails). Claims invocation slots and dispatches the stage's
+    tasks onto a thread pool; tasks beyond the slot limit queue FIFO.
+  * ``TASK_DONE`` — a task's (possibly backup-shortened) completion in
+    virtual time; frees its slot, advances pipelining quotas, arms backup
+    timers, finishes stages and queries.
+  * ``BACKUP_FIRE`` — §5 straggler mitigation at task granularity: once a
+    quorum (``StragglerConfig.backup_quorum``) of a stage's tasks has
+    finished, the coordinator estimates the stage median and arms a timer
+    per straggling task; when it fires, a duplicate (virtual) invocation
+    races the original and completion is the min (the store's conditional
+    PUT makes the first writer win).
+
+Invocation limiting (§4.3) is an O(log n) free-slot heap shared by every
+concurrently running query — ``run_queries`` models the paper's §6.5
+multi-tenant workload: one slot pool, per-query arrival times — instead of
+an O(max_parallel) argmin scan per task.
+
+Real task work (``Worker.run_*``) executes on a ``ThreadPoolExecutor`` so
+wall-clock scales with cores, while *virtual* time stays deterministic:
+every task draws its latency randomness from an RNG keyed on
+(seed, query, stage index, task index, stream), never from a shared
+sequential stream, so results, request counts and virtual latency are
+identical for any executor width. Determinism invariants:
+
+  * the loop pops an event only once no in-flight task could still produce
+    an earlier one (event time <= the minimum virtual start among
+    unresolved tasks), and event keys carry (run, stage, task) indices so
+    equal-time ordering is stable;
+  * the slot heap mutates only at event pops (claim at STAGE_READY /
+    queued dispatch, release at TASK_DONE), never at wall-clock future
+    resolution, so its contents are a pure function of virtual history.
+
+A consumer's virtual start may precede late producer ends (pipelining), but
+its real execution only begins once every producer task has actually run —
+input avails carry the producers' virtual ends, so the simulated read still
+pays the wait. Backup duplicates that fire after a consumer was dispatched
+only shorten the producer's own completion (conservative).
+
+Multi-stage shuffles (§4.2) are expanded statically: combiner stages are
+spliced into a private working copy of the plan (and into the join's deps),
+never into the caller's object, so a plan dict can be re-run any number of
+times.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
+import heapq
 import math
+import os
+import threading
+import zlib
+from collections import deque
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 
 import numpy as np
 
 from repro.core import shuffle as SH
-from repro.core.cost import LAMBDA_GB_S, LAMBDA_PER_REQ, WORKER_MEM_GB, \
-    QueryCost
-from repro.core.plan import out_key, stage_by_name, validate_plan
+from repro.core.cost import WORKER_MEM_GB, QueryCost
+from repro.core.plan import stage_by_name, validate_plan
 from repro.core.stragglers import StragglerConfig
 from repro.core.worker import PartInput, TaskResult, Worker
 from repro.objectstore.store import ObjectStore
-from repro.relational.table import Table, deserialize_table, serialize_table
+from repro.relational.table import Table, deserialize_table
 
 INVOKE_OVERHEAD_S = 0.030            # Lambda invoke + runtime startup
 COLD_STRAGGLER_PROB = 0.01           # slow-worker tail (backup-task target)
+
+# event kinds, in tie-break priority order at equal virtual times
+_READY, _DONE, _BACKUP = 0, 1, 2
+_EPS = 1e-9
 
 
 @dataclasses.dataclass
@@ -48,39 +96,100 @@ class QueryResult:
         return self.cost.total
 
 
+@dataclasses.dataclass
+class _Task:
+    start: float = 0.0           # virtual start (slot claimed + overhead)
+    dur: float = 0.0             # original duration; the slot is busy this long
+    end: float = math.inf        # effective completion (min with backup dup)
+    dispatched: bool = False     # submitted to the executor
+    resolved: bool = False       # real execution finished, virtual end known
+    done: bool = False           # TASK_DONE processed
+    result: TaskResult | None = None
+
+
+class _Stage:
+    def __init__(self, st: dict, sidx: int):
+        self.st = st
+        self.sidx = sidx
+        self.n = 0
+        self.tasks: list[_Task] = []
+        self.done = 0
+        self.undispatched = 0
+        self.ready_pushed = False
+        self.dispatched = False
+        self.ready_t = 0.0
+        self.backup_armed = False
+        self.median = 0.0
+
+
+class _Run:
+    """Mutable per-query scheduling state."""
+
+    def __init__(self, ridx: int, plan: dict, display_name: str, t0: float):
+        self.ridx = ridx
+        self.plan = plan                       # private expanded copy
+        self.name = plan["name"]               # unique store namespace
+        self.display_name = display_name
+        self.t0 = t0
+        self.stages = [_Stage(st, i) for i, st in enumerate(plan["stages"])]
+        self.by_name = {s.st["name"]: s for s in self.stages}
+        self.keys: dict[str, list] = {}
+        self.ends: dict[str, list[float]] = {}
+        self.nparts: dict[str, int] = {}
+        self.gets = self.puts = self.invocations = self.backups = 0
+        self.task_seconds = 0.0
+        self.final_result = None
+        self.stage_windows: dict[str, tuple[float, float]] = {}
+        self.finish_t = t0
+
+    def consumers_of(self, name: str) -> list[_Stage]:
+        return [s for s in self.stages if name in s.st["deps"]]
+
+
 class Coordinator:
     def __init__(self, store: ObjectStore, base_splits: dict[str, list[str]],
                  policy: StragglerConfig | None = None, *, seed: int = 0,
-                 max_parallel: int = 1000, compute_scale: float = 1.0):
+                 max_parallel: int = 1000, compute_scale: float = 1.0,
+                 executor_workers: int | None = None):
         self.store = store
         self.base_splits = base_splits
         self.policy = policy or StragglerConfig()
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
         self.max_parallel = max_parallel
         self.compute_scale = compute_scale
+        self.executor_workers = executor_workers or min(8, os.cpu_count()
+                                                        or 1)
         self._small_cache: dict[str, Table] = {}
+        self._cache_lock = threading.Lock()
+        self._name_counts: dict[str, int] = {}
 
     # ------------------------------------------------------------ helpers
     def _base_reader(self, worker: Worker):
         """Broadcast-read a small base table (charged as GETs; see DESIGN)."""
         def read(table: str) -> Table:
-            if table not in self._small_cache:
+            with self._cache_lock:
+                cached = self._small_cache.get(table)
+            if cached is None:
                 tabs = [deserialize_table(self.store.get(k))
                         for k in self.base_splits[table]]
-                self._small_cache[table] = Table.concat(tabs)
+                cached = Table.concat(tabs)
+                with self._cache_lock:
+                    self._small_cache[table] = cached
             worker.client.gets += len(self.base_splits[table])
-            return self._small_cache[table]
+            return cached
         return read
 
-    def _worker(self) -> Worker:
-        return Worker(self.store, self.policy,
-                      np.random.default_rng(self.rng.integers(2 ** 63)),
-                      self.compute_scale)
+    def _task_rng(self, run: _Run, sidx: int, tidx: int, stream: int
+                  ) -> np.random.Generator:
+        """Deterministic per-(query, stage, task, stream) RNG: virtual timing
+        never depends on thread interleaving or executor width."""
+        return np.random.default_rng(
+            [self.seed, zlib.crc32(run.name.encode()), sidx, tidx, stream])
 
-    def _slowdown(self) -> float:
-        f = float(self.rng.lognormal(0.0, 0.06))
-        if self.rng.random() < COLD_STRAGGLER_PROB:
-            f *= 2.0 + float(self.rng.pareto(1.5))
+    def _slowdown(self, rng: np.random.Generator) -> float:
+        f = float(rng.lognormal(0.0, 0.06))
+        if rng.random() < COLD_STRAGGLER_PROB:
+            f *= 2.0 + float(rng.pareto(1.5))
         return f
 
     def _consumer_tasks(self, plan, st) -> int:
@@ -96,174 +205,351 @@ class Coordinator:
             return st["tasks"] or len(self.base_splits[st["table"]])
         return max(st.get("tasks", 1), 1)
 
-    # ------------------------------------------------------------ run
-    def run_query(self, plan: dict, t0: float = 0.0) -> QueryResult:
-        validate_plan(plan)
-        query = plan["name"]
-        slots: list[float] = [t0] * self.max_parallel
-        ends: dict[str, list[float]] = {}         # stage -> task end times
-        keys: dict[str, list[str]] = {}           # stage -> output keys
-        nparts: dict[str, int] = {}               # stage -> partition count
-        gets = puts = invocations = backups = 0
-        task_seconds = 0.0
-        final_result = None
-        stage_windows: dict[str, tuple[float, float]] = {}
-
-        def ready_time(dep_names) -> float:
-            t = t0
-            frac = self.policy.pipeline_fraction if self.policy.pipelining \
-                else 1.0
-            for d in dep_names:
-                te = sorted(ends[d])
-                idx = min(int(math.ceil(frac * len(te))), len(te)) - 1
-                t = max(t, te[max(idx, 0)])
-            return t
-
-        def schedule(ready: float) -> float:
-            """Claim the earliest slot; returns virtual start time."""
-            i = int(np.argmin(slots))
-            start = max(slots[i], ready) + INVOKE_OVERHEAD_S
-            return start, i
-
-        def finish(slot_i: int, end: float):
-            slots[slot_i] = end
-
-        def run_stage(st):
-            nonlocal gets, puts, invocations, backups, task_seconds, \
-                final_result
-            name = st["name"]
-            n = self._ntasks(plan, st)
-            ready = ready_time(st["deps"])
-            results: list[TaskResult] = []
-            starts: list[float] = []
-            durs: list[float] = []
-            for ti in range(n):
-                w = self._worker()
-                start, slot = schedule(ready)
-                r = self._run_task(plan, st, ti, w, start, ends, keys,
-                                   nparts)
-                # worker slowdown (Lambda variability)
-                dur = (r.virtual_end - start) * self._slowdown()
-                finish(slot, start + dur)
-                results.append(r)
-                starts.append(start)
-                durs.append(dur)
-                invocations += 1
-                gets += r.gets
-                puts += r.puts
-                if r.result is not None:
-                    final_result = r.result
-            # backup tasks (§5 power-of-two-choices at task granularity)
-            med = float(np.median(durs)) if durs else 0.0
-            end_times = []
-            for i, (r, start) in enumerate(zip(results, starts)):
-                end = start + durs[i]
-                if self.policy.backup_tasks and med > 0 and \
-                        durs[i] > self.policy.backup_factor * med:
-                    detect = start + self.policy.backup_factor * med
-                    dup = med * self._slowdown() + INVOKE_OVERHEAD_S
-                    end = min(end, detect + dup)
-                    backups += 1
-                    invocations += 1
-                    gets += r.gets               # duplicate re-reads inputs
-                    puts += r.puts
-                    task_seconds += min(dup, durs[i])
-                end_times.append(end)
-                task_seconds += durs[i]
-            ends[name] = end_times
-            keys[name] = [r.key for r in results]
-            stage_windows[name] = (min(starts), max(end_times))
-
-        for st in list(plan["stages"]):          # combiners splice in
+    # ---------------------------------------------------- plan preparation
+    def _expand_plan(self, plan: dict, unique_name: str) -> dict:
+        """Working copy with combiner stages spliced in for every multi-stage
+        shuffle join (which gains them as deps). The caller's plan object is
+        never touched, so re-running the same plan dict is safe."""
+        stages = copy.deepcopy(plan["stages"])
+        expanded = {"name": unique_name, "stages": stages}
+        out = []
+        for st in stages:
             if st["kind"] == "join" and \
                     st.get("shuffle", {}).get("strategy") == "multi":
-                self._insert_combiners(plan, st, run_stage, ends, keys,
-                                       nparts)
-            run_stage(st)
+                r = self._ntasks(expanded, st)
+                for side_name in ("left", "right"):
+                    src = st[side_name]
+                    s = self._ntasks(expanded, stage_by_name(expanded, src))
+                    sh = st["shuffle"]
+                    a, b = SH.clamped_splits(s, r, sh.get("p", 1 / 4),
+                                             sh.get("f", 1 / 4))
+                    assign = SH.combiner_assignment(
+                        SH.multi_stage(s, r, 1.0 / a, 1.0 / b))
+                    cname = f"{st['name']}__combine_{side_name}"
+                    out.append({"name": cname, "kind": "combine",
+                                "source": src, "tasks": len(assign),
+                                "assign": assign, "deps": [src]})
+                    st["deps"] = list(st["deps"]) + [cname]
+            out.append(st)
+        expanded["stages"] = out
+        return expanded
 
-        last = plan["stages"][-1]["name"]
-        latency = max(ends[last]) - t0
-        cost = QueryCost(task_seconds * WORKER_MEM_GB, invocations, gets,
-                         puts)
-        return QueryResult(query, latency, final_result, cost,
-                           invocations - backups, backups,
-                           {k: (round(a - t0, 3), round(b - t0, 3))
-                            for k, (a, b) in stage_windows.items()},
-                           task_seconds)
+    # ------------------------------------------------------------ run API
+    def run_query(self, plan: dict, t0: float = 0.0) -> QueryResult:
+        return self.run_queries([plan], arrival_times=[t0])[0]
 
-    # ---------------------------------------------------------- task exec
-    def _run_task(self, plan, st, ti, w: Worker, start, ends, keys, nparts
-                  ) -> TaskResult:
-        query = plan["name"]
+    def run_queries(self, plans: list[dict],
+                    arrival_times: list[float] | None = None,
+                    ) -> list[QueryResult]:
+        """Run several queries against ONE shared invocation-slot pool.
+
+        ``arrival_times[i]`` offsets query i's root stages in virtual time
+        (paper §6.5: concurrent streams contend for the account-level
+        parallel-invocation limit). Results keep the order of ``plans``.
+        """
+        if not plans:
+            return []
+        arrivals = list(arrival_times or [0.0] * len(plans))
+        if len(arrivals) != len(plans):
+            raise ValueError(f"{len(plans)} plans but {len(arrivals)} "
+                             "arrival times")
+        runs: list[_Run] = []
+        for ridx, (plan, arr) in enumerate(zip(plans, arrivals)):
+            validate_plan(plan)
+            seen = self._name_counts.get(plan["name"], 0)
+            self._name_counts[plan["name"]] = seen + 1
+            uname = plan["name"] if seen == 0 else f"{plan['name']}@{seen}"
+            expanded = self._expand_plan(plan, uname)
+            validate_plan(expanded)
+            run = _Run(ridx, expanded, plan["name"], arr)
+            for stage in run.stages:
+                stage.n = self._ntasks(expanded, stage.st)
+                stage.undispatched = stage.n
+                stage.tasks = [_Task() for _ in range(stage.n)]
+                run.keys[stage.st["name"]] = [None] * stage.n
+                run.ends[stage.st["name"]] = [0.0] * stage.n
+            runs.append(run)
+
+        slots = [min(arrivals)] * self.max_parallel
+        heapq.heapify(slots)
+        events: list[tuple] = []              # (t, kind, ridx, sidx, tidx)
+        pending: deque[tuple[int, int, int]] = deque()   # tasks w/o a slot
+        outstanding: dict = {}                # future -> (run, stage, tidx)
+
+        for run in runs:
+            for stage in run.stages:
+                if not stage.st["deps"]:
+                    stage.ready_pushed = True
+                    heapq.heappush(events,
+                                   (run.t0, _READY, run.ridx, stage.sidx, 0))
+
+        with ThreadPoolExecutor(max_workers=self.executor_workers) as pool:
+            while events or outstanding:
+                while outstanding and not self._can_pop(events, outstanding):
+                    self._await_some(outstanding, events)
+                if not events:
+                    continue
+                t, kind, ridx, sidx, tidx = heapq.heappop(events)
+                run, stage = runs[ridx], runs[ridx].stages[sidx]
+                if kind == _READY:
+                    if not stage.dispatched and \
+                            not self._deps_resolved(run, stage):
+                        # a late-dispatched producer hasn't executed yet;
+                        # wall-clock wait only, virtual state is unchanged
+                        heapq.heappush(events, (t, kind, ridx, sidx, tidx))
+                        self._await_some(outstanding, events)
+                        continue
+                    self._on_ready(run, stage, t, slots, pending, pool,
+                                   outstanding)
+                elif kind == _DONE:
+                    self._on_done(runs, run, stage, tidx, t, events, slots,
+                                  pending, pool, outstanding)
+                else:
+                    self._on_backup(run, stage, tidx, t, events)
+
+        return [self._finish(run) for run in runs]
+
+    # ----------------------------------------------------- loop plumbing
+    @staticmethod
+    def _can_pop(events, outstanding) -> bool:
+        """An event may fire only if no unresolved task could still produce
+        an earlier one (a task's end >= its start)."""
+        if not events:
+            return False
+        if not outstanding:
+            return True
+        bound = min(stage.tasks[tidx].start
+                    for (_r, stage, tidx) in outstanding.values())
+        return events[0][0] <= bound + _EPS
+
+    def _await_some(self, outstanding, events):
+        """Block until >=1 real execution finishes; record virtual timings.
+        Only deterministic state is touched, in deterministic per-task ways,
+        so wall-clock completion order never leaks into virtual time."""
+        done, _ = wait(list(outstanding), return_when=FIRST_COMPLETED)
+        for f in done:
+            run, stage, tidx = outstanding.pop(f)
+            self._resolve(run, stage, tidx, f.result(), events)
+
+    @staticmethod
+    def _deps_resolved(run: _Run, stage: _Stage) -> bool:
+        return all(tk.resolved for dep in stage.st["deps"]
+                   for tk in run.by_name[dep].tasks)
+
+    def _dispatch(self, run: _Run, stage: _Stage, tidx: int, start: float,
+                  pool, outstanding):
+        task = stage.tasks[tidx]
+        task.start = start
+        task.dispatched = True
+        stage.undispatched -= 1
+        worker = Worker(self.store, self.policy,
+                        self._task_rng(run, stage.sidx, tidx, 0),
+                        self.compute_scale)
+        call = self._build_task(run, stage.st, tidx, worker, start)
+        outstanding[pool.submit(call)] = (run, stage, tidx)
+
+    def _drain_pending(self, runs, pending, slots, pool, outstanding,
+                       events, now: float):
+        """Give freed slots to queued tasks, FIFO. Called only at TASK_DONE
+        pops, so assignment order is a function of virtual time alone."""
+        while pending and slots:
+            ridx, sidx, tidx = pending.popleft()
+            run, stage = runs[ridx], runs[ridx].stages[sidx]
+            start = max(heapq.heappop(slots), stage.ready_t, now) \
+                + INVOKE_OVERHEAD_S
+            self._dispatch(run, stage, tidx, start, pool, outstanding)
+            # the stage's backup timers were armed before this task even
+            # started: arm its own straggler timer now (stale-checked at
+            # the pop if the task finishes in time)
+            if stage.backup_armed and stage.median > 0:
+                detect = start + self.policy.backup_factor * stage.median
+                heapq.heappush(events,
+                               (detect, _BACKUP, ridx, sidx, tidx))
+
+    # ------------------------------------------------------- event handlers
+    def _on_ready(self, run: _Run, stage: _Stage, t: float, slots, pending,
+                  pool, outstanding):
+        if stage.dispatched:
+            return
+        stage.dispatched = True
+        stage.ready_t = t
+        for ti in range(stage.n):
+            if not slots:
+                pending.append((run.ridx, stage.sidx, ti))
+                continue
+            start = max(heapq.heappop(slots), t) + INVOKE_OVERHEAD_S
+            self._dispatch(run, stage, ti, start, pool, outstanding)
+
+    def _resolve(self, run: _Run, stage: _Stage, tidx: int, r: TaskResult,
+                 events):
+        """A real execution finished: fix the task's virtual timing."""
+        task = stage.tasks[tidx]
+        slow = self._slowdown(self._task_rng(run, stage.sidx, tidx, 1))
+        dur = (r.virtual_end - task.start) * slow
+        task.dur = dur
+        task.end = task.start + dur
+        task.resolved = True
+        task.result = r
+        name = stage.st["name"]
+        run.keys[name][tidx] = r.key
+        run.ends[name][tidx] = task.end
+        run.invocations += 1
+        run.gets += r.gets
+        run.puts += r.puts
+        if r.result is not None:
+            run.final_result = r.result
+        heapq.heappush(events, (task.end, _DONE, run.ridx, stage.sidx,
+                                tidx))
+
+    def _on_done(self, runs, run: _Run, stage: _Stage, tidx: int, t: float,
+                 events, slots, pending, pool, outstanding):
+        task = stage.tasks[tidx]
+        if task.done or abs(t - task.end) > _EPS:
+            return                        # stale event (backup rescheduled)
+        task.done = True
+        stage.done += 1
+        # float accumulation happens here, in virtual-event order, so the
+        # sum is bit-identical for every executor width
+        run.task_seconds += task.dur
+        # the slot stays busy for the ORIGINAL duration even when a backup
+        # duplicate finished the task's work earlier
+        heapq.heappush(slots, task.start + task.dur)
+        self._drain_pending(runs, pending, slots, pool, outstanding, events,
+                            t)
+
+        # arm backup timers once the stage median is estimable (§5)
+        pol = self.policy
+        if pol.backup_tasks and not stage.backup_armed and stage.n > 1 and \
+                stage.done >= max(math.ceil(pol.backup_quorum * stage.n), 1):
+            stage.backup_armed = True
+            stage.median = float(np.median(
+                [tk.dur for tk in stage.tasks if tk.done]))
+            if stage.median > 0:
+                for ti, tk in enumerate(stage.tasks):
+                    detect = tk.start + pol.backup_factor * stage.median
+                    if tk.dispatched and not tk.done and \
+                            tk.end > detect + _EPS:
+                        heapq.heappush(events, (detect, _BACKUP, run.ridx,
+                                                stage.sidx, ti))
+
+        if stage.done == stage.n:
+            self._finish_stage(run, stage)
+        self._check_consumers(run, stage.st["name"], events, t)
+
+    def _on_backup(self, run: _Run, stage: _Stage, tidx: int, t: float,
+                   events):
+        """BACKUP_FIRE: duplicate a straggling task; completion is the min
+        of original and duplicate (first conditional PUT wins)."""
+        task = stage.tasks[tidx]
+        if task.done or task.end <= t + _EPS:
+            return
+        dup = stage.median * self._slowdown(
+            self._task_rng(run, stage.sidx, tidx, 2)) + INVOKE_OVERHEAD_S
+        run.backups += 1
+        run.invocations += 1
+        run.gets += task.result.gets        # duplicate re-reads its inputs
+        run.puts += task.result.puts
+        run.task_seconds += min(dup, task.dur)
+        new_end = min(task.end, t + dup)
+        if new_end < task.end - _EPS:
+            task.end = new_end              # original DONE event goes stale
+            run.ends[stage.st["name"]][tidx] = new_end
+            heapq.heappush(events,
+                           (new_end, _DONE, run.ridx, stage.sidx, tidx))
+
+    def _finish_stage(self, run: _Run, stage: _Stage):
+        name = stage.st["name"]
+        run.stage_windows[name] = (min(tk.start for tk in stage.tasks),
+                                   max(tk.end for tk in stage.tasks))
+        if stage.st is run.plan["stages"][-1]:
+            run.finish_t = max(tk.end for tk in stage.tasks)
+
+    def _check_consumers(self, run: _Run, producer: str, events,
+                         now: float):
+        """Push STAGE_READY for consumers whose pipelining quota (§4.4) is
+        now met by every dependency."""
+        frac = self.policy.pipeline_fraction if self.policy.pipelining \
+            else 1.0
+        for cons in run.consumers_of(producer):
+            if cons.ready_pushed:
+                continue
+            ready, ok = run.t0, True
+            for dep in cons.st["deps"]:
+                d = run.by_name[dep]
+                k = min(math.ceil(frac * d.n), d.n)
+                # real data: every dep task must at least be dispatched
+                if d.done < max(k, 1) or d.undispatched > 0:
+                    ok = False
+                    break
+                done_ends = sorted(tk.end for tk in d.tasks if tk.done)
+                ready = max(ready, done_ends[k - 1])
+            if ok:
+                cons.ready_pushed = True
+                heapq.heappush(events, (max(ready, now), _READY, run.ridx,
+                                        cons.sidx, 0))
+
+    def _finish(self, run: _Run) -> QueryResult:
+        cost = QueryCost(run.task_seconds * WORKER_MEM_GB, run.invocations,
+                         run.gets, run.puts)
+        return QueryResult(
+            run.display_name, run.finish_t - run.t0, run.final_result, cost,
+            run.invocations - run.backups, run.backups,
+            {k: (round(a - run.t0, 3), round(b - run.t0, 3))
+             for k, (a, b) in run.stage_windows.items()},
+            run.task_seconds)
+
+    # ---------------------------------------------------------- task build
+    def _build_task(self, run: _Run, st, ti, w: Worker, start):
+        """Bind a task's inputs NOW (event thread, deterministic state) and
+        return a zero-arg callable for the executor."""
+        query = run.name
         kind = st["kind"]
         base_reader = self._base_reader(w)
+        plan = run.plan
         if kind == "scan":
             n_out = self._consumer_tasks(plan, st)
-            nparts[st["name"]] = n_out
+            run.nparts[st["name"]] = n_out
             split = self.base_splits[st["table"]][
                 ti % len(self.base_splits[st["table"]])]
-            return w.run_scan(query, st, ti, split, 0.0, start, n_out,
-                              base_reader)
+            return lambda: w.run_scan(query, st, ti, split, 0.0, start,
+                                      n_out, base_reader)
         if kind == "join":
             n_out = self._consumer_tasks(plan, st)
-            nparts[st["name"]] = n_out
-            left = self._side_inputs(plan, st, st["left"], ti, ends, keys,
-                                     nparts)
-            right = self._side_inputs(plan, st, st["right"], ti, ends, keys,
-                                      nparts)
-            return w.run_join(query, st, ti, left, right, start, n_out,
-                              base_reader)
+            run.nparts[st["name"]] = n_out
+            left = self._side_inputs(run, st, st["left"], ti)
+            right = self._side_inputs(run, st, st["right"], ti)
+            return lambda: w.run_join(query, st, ti, left, right, start,
+                                      n_out, base_reader)
         if kind == "combine":
             spec = st["assign"][ti]
             src = st["source"]
-            inputs = [PartInput(keys[src][fi], ends[src][fi],
-                                nparts[src], spec["partitions"][0],
+            inputs = [PartInput(run.keys[src][fi], run.ends[src][fi],
+                                run.nparts[src], spec["partitions"][0],
                                 spec["partitions"][1] - 1)
                       for fi in range(*spec["files"])]
-            return w.run_combine(query, st, ti, inputs, start)
+            return lambda: w.run_combine(query, st, ti, inputs, start)
         if kind == "final_agg":
             dep = st["deps"][0]
-            inputs = list(zip(keys[dep], ends[dep]))
-            return w.run_final(query, st, inputs, start)
+            inputs = list(zip(run.keys[dep], run.ends[dep]))
+            return lambda: w.run_final(query, st, inputs, start)
         raise ValueError(kind)
 
-    def _side_inputs(self, plan, st, side: str, ti, ends, keys, nparts
-                     ) -> list[PartInput]:
+    def _side_inputs(self, run: _Run, st, side: str, ti) -> list[PartInput]:
         """Which objects + partition ranges feed join task ti from `side`.
 
         Single-stage: every producer object, partition ti (2sr reads total).
         Multi-stage: only the combiners covering partition ti (r/f reads).
         """
         comb = f"{st['name']}__combine_{side}"
-        if comb in keys:                       # combined side
-            cst = stage_by_name(plan, comb)
+        if comb in run.keys:                   # combined side
+            cst = stage_by_name(run.plan, comb)
             out = []
             for ci, spec in enumerate(cst["assign"]):
                 lo, hi = spec["partitions"]
                 if lo <= ti < hi:
-                    out.append(PartInput(keys[comb][ci], ends[comb][ci],
+                    out.append(PartInput(run.keys[comb][ci],
+                                         run.ends[comb][ci],
                                          hi - lo, ti - lo, ti - lo))
             return out
-        return [PartInput(k, e, nparts[side], ti, ti)
-                for k, e in zip(keys[side], ends[side])]
-
-    def _insert_combiners(self, plan, st, run_stage, ends, keys, nparts):
-        """Materialize combine stages for a multi-stage shuffle join."""
-        sh = st["shuffle"]
-        r = self._ntasks(plan, st)
-        for side_name in ("left", "right"):
-            src = st[side_name]
-            s = len(keys[src])
-            # clamp the split factors to the actual producer/consumer counts
-            a = max(1, min(int(round(1 / sh.get("p", 1 / 4))), r))
-            b = max(1, min(int(round(1 / sh.get("f", 1 / 4))), s))
-            plan_obj = SH.multi_stage(s, r, 1.0 / a, 1.0 / b)
-            assign = SH.combiner_assignment(plan_obj)
-            cname = f"{st['name']}__combine_{side_name}"
-            cst = {"name": cname, "kind": "combine", "source": src,
-                   "tasks": len(assign), "assign": assign, "deps": [src]}
-            # splice into the plan for introspection; run immediately
-            plan["stages"].insert(
-                [i for i, x in enumerate(plan["stages"])
-                 if x["name"] == st["name"]][0], cst)
-            run_stage(cst)
+        return [PartInput(k, e, run.nparts[side], ti, ti)
+                for k, e in zip(run.keys[side], run.ends[side])]

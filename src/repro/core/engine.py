@@ -43,21 +43,31 @@ def load_base_tables(store: ObjectStore, tables: dict[str, Table],
 
 def make_engine(sf: float = 0.002, *, seed: int = 0,
                 policy: StragglerConfig | None = None,
-                max_parallel: int = 1000, target_bytes: int = 1 << 20):
-    """(coordinator, tables) over a fresh simulated store."""
+                max_parallel: int = 1000, target_bytes: int = 1 << 20,
+                compute_scale: float = 1.0,
+                executor_workers: int | None = None):
+    """(coordinator, tables) over a fresh simulated store.
+
+    ``compute_scale=0`` makes virtual latency independent of measured
+    compute (fully deterministic); ``executor_workers`` sizes the
+    coordinator's thread pool for real task execution.
+    """
     tables = generate(sf, seed=seed)
     store = ObjectStore(StoreConfig(seed=seed, time_scale=0.0,
                                     simulate_visibility_lag=False))
     splits = load_base_tables(store, tables, target_bytes)
     coord = Coordinator(store, splits, policy, seed=seed,
-                        max_parallel=max_parallel)
+                        max_parallel=max_parallel,
+                        compute_scale=compute_scale,
+                        executor_workers=executor_workers)
     return coord, tables
 
 
 def run_query(coord: Coordinator, name: str, ntasks=None, **plan_kw
               ) -> QueryResult:
-    plan = QUERIES[name](ntasks, **plan_kw) if name == "q12" \
-        else QUERIES[name](ntasks)
+    # plan_kw reaches every builder: unsupported options fail loudly at the
+    # builder instead of being silently dropped for non-q12 queries
+    plan = QUERIES[name](ntasks, **plan_kw)
     return coord.run_query(plan)
 
 

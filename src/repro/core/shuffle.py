@@ -81,6 +81,17 @@ def choose_strategy(s: int, r: int, *, combiners: int | None = None,
     return best
 
 
+def clamped_splits(s: int, r: int, p: float, f: float) -> tuple[int, int]:
+    """(partition-splits a, file-splits b) for a multi-stage shuffle, with
+    degenerate fractions clamped: more partition-splits than consumers (or
+    more file-splits than producers) would give zero-width ranges, i.e.
+    empty combiners and partitions nobody covers. The single source of
+    truth for both plan expansion and the concrete work assignment."""
+    a = max(1, min(int(round(1.0 / p)), r))
+    b = max(1, min(int(round(1.0 / f)), s))
+    return a, b
+
+
 def combiner_assignment(plan: ShufflePlan) -> list[dict]:
     """Concrete work assignment for each combining task.
 
@@ -88,8 +99,7 @@ def combiner_assignment(plan: ShufflePlan) -> list[dict]:
     [i * r*p, (i+1) * r*p) from input files [j * s*f, (j+1) * s*f).
     """
     assert plan.strategy == "multi"
-    a = int(round(1.0 / plan.p))
-    b = int(round(1.0 / plan.f))
+    a, b = clamped_splits(plan.producers, plan.consumers, plan.p, plan.f)
     parts_per = plan.consumers // a
     files_per = plan.producers // b
     out = []

@@ -92,6 +92,9 @@ class StragglerConfig:
     # task-level backup (power of two choices on whole workers)
     backup_tasks: bool = True
     backup_factor: float = 2.5       # duplicate tasks slower than f x median
+    backup_quorum: float = 0.5       # stage fraction done before the
+    #                                  coordinator estimates the median and
+    #                                  arms BACKUP_FIRE timers (event loop)
 
     @staticmethod
     def all_off() -> "StragglerConfig":

@@ -6,7 +6,14 @@ compiled operator pipeline, writes its output object(s), and exits. No
 worker-to-worker communication exists — the store is the only medium.
 
 Timing is virtual (objectstore.client): real bytes move, latencies are
-sampled; compute time is measured wall-clock x ``compute_scale``.
+sampled; compute time is measured per-thread CPU time x ``compute_scale``
+(``time.thread_time``, not wall-clock, so running many workers concurrently
+on the coordinator's thread pool does not inflate virtual compute when the
+GIL or the scheduler makes a thread wait).
+
+A Worker instance is used by exactly one task on one executor thread; its
+store client and RNG are task-private, so workers need no locking — the
+ObjectStore itself is the only shared (and internally locked) state.
 """
 from __future__ import annotations
 
@@ -122,10 +129,10 @@ class Worker:
                  avail: float, now: float, n_out_parts: int,
                  base_reader) -> TaskResult:
         datas, t_in = self._read_whole([(split_key, avail)], now)
-        c0 = time.perf_counter()
+        c0 = time.thread_time()
         t = deserialize_table(datas[0], st.get("columns"))
         t = _apply_ops(t, st.get("ops", []), base_reader)
-        comp = (time.perf_counter() - c0) * self.compute_scale
+        comp = (time.thread_time() - c0) * self.compute_scale
         return self._emit(query, st, task_id, t, t_in + comp, comp,
                           n_out_parts)
 
@@ -135,7 +142,7 @@ class Worker:
         """Partitioned hash join on this task's partition of both sides."""
         lt, t1 = self._read_partitions(left_inputs, now)
         rt, t2 = self._read_partitions(right_inputs, t1)
-        c0 = time.perf_counter()
+        c0 = time.thread_time()
         left = Table.concat([t for tabs in lt for t in tabs])
         right = Table.concat([t for tabs in rt for t in tabs])
         if len(left) and len(right):
@@ -143,7 +150,7 @@ class Worker:
             t = _apply_ops(t, st.get("ops", []), base_reader)
         else:
             t = Table({})
-        comp = (time.perf_counter() - c0) * self.compute_scale
+        comp = (time.thread_time() - c0) * self.compute_scale
         return self._emit(query, st, task_id, t, t2 + comp, comp,
                           n_out_parts)
 
@@ -153,12 +160,12 @@ class Worker:
         run from a subset of files into one combined partitioned object."""
         per_file, t_in = self._read_partitions(inputs, now)
         first, last = inputs[0].first, inputs[0].last
-        c0 = time.perf_counter()
+        c0 = time.thread_time()
         parts = []
         for off in range(last - first + 1):
             merged = Table.concat([tabs[off] for tabs in per_file])
             parts.append(serialize_table(merged))
-        comp = (time.perf_counter() - c0) * self.compute_scale
+        comp = (time.thread_time() - c0) * self.compute_scale
         payload = FMT.write_partitioned(parts)
         key = out_key(query, st["name"], task_id)
         t_out = self.client.write(key, payload, t_in + comp)
@@ -168,7 +175,7 @@ class Worker:
     def run_final(self, query: str, st: dict,
                   inputs: list[tuple[str, float]], now: float) -> TaskResult:
         datas, t_in = self._read_whole(inputs, now)
-        c0 = time.perf_counter()
+        c0 = time.thread_time()
         parts = [deserialize_table(d) for d in datas if len(d) > 8]
         t = OPS.merge_partials([p for p in parts if len(p)],
                                st.get("keys", []),
@@ -176,7 +183,7 @@ class Worker:
         if st.get("sort") and len(t):
             t = OPS.op_sort_limit(t, [tuple(s) for s in st["sort"]],
                                   st.get("limit"))
-        comp = (time.perf_counter() - c0) * self.compute_scale
+        comp = (time.thread_time() - c0) * self.compute_scale
         key = out_key(query, st["name"], 0)
         payload = serialize_table(t)
         t_out = self.client.write(key, payload, t_in + comp)

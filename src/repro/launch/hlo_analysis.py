@@ -33,12 +33,13 @@ _INSTR_RE = re.compile(
 _COMP_HDR_RE = re.compile(
     r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*[^{]*\{\s*$")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALLED_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _GROUPS_RE = re.compile(
     r"replica_groups=(\{\{[^=]*?\}\}|\[\d+,\d+\]<=\[[0-9,]+\])")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:, )?)+)\)")
 
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
@@ -120,12 +121,14 @@ def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
                 t = _TRIP_RE.search(ins.line)
                 if t:
                     trip = int(t.group(1))
-                for cn in _CALLED_RE.findall(ins.line):
-                    if cn in comps:
-                        child_m = m * (trip if "body=" in ins.line and
-                                       f"body=%{cn}" in ins.line or
-                                       f"body={cn}" in ins.line else 1)
-                        visit(comps[cn], child_m)
+                body = _WHILE_BODY_RE.search(ins.line)
+                cond = _WHILE_COND_RE.search(ins.line)
+                if body and body.group(1) in comps:
+                    visit(comps[body.group(1)], m * trip)
+                # the condition runs once more than the body (trip + 1)
+                if cond and cond.group(1) in comps and \
+                        (not body or cond.group(1) != body.group(1)):
+                    visit(comps[cond.group(1)], m * (trip + 1))
             elif ins.opcode in ("fusion", "call", "map", "reduce",
                                 "reduce-window", "scatter", "sort",
                                 "select-and-scatter", "all-reduce",
@@ -144,15 +147,49 @@ def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
     return dict(mult)
 
 
+def _operand_names(ins: Instr) -> list[str]:
+    """Operand names of an instruction, robust to both HLO dialects:
+    bare ``op(%a, %b)`` and typed ``op(f32[2]{0} %a, (s32[], f32[4]) %b)``.
+
+    The argument list is the parenthesized group right after the opcode
+    (located via _INSTR_RE so tuple types before the opcode don't confuse
+    it); operands are split on top-level commas and the trailing name token
+    of each piece is the operand.
+    """
+    m = _INSTR_RE.match(ins.line)
+    if not m:
+        return []
+    depth, buf, pieces = 1, [], []
+    for ch in ins.line[m.end():]:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth == 0:
+                pieces.append("".join(buf))
+                break
+        if ch == "," and depth == 1:
+            pieces.append("".join(buf))
+            buf = []
+            continue
+        buf.append(ch)
+    names = []
+    for piece in pieces:
+        toks = re.findall(r"%([\w.\-]+)", piece) \
+            or re.findall(r"([\w.\-]+)", piece)
+        if toks:
+            names.append(toks[-1])
+    return names
+
+
 def _dot_flops(ins: Instr, comp: Computation) -> float:
     out_elems, _ = _shape_elems_bytes(ins.type_str)
     lc = _LHS_CONTRACT_RE.search(ins.line)
     contract = 1
     if lc:
-        ops = _OPERANDS_RE.search(ins.line)
+        ops = _operand_names(ins)
         if ops:
-            lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
-            lhs_type = comp.shapes.get(lhs_name)
+            lhs_type = comp.shapes.get(ops[0])
             if lhs_type:
                 m = _SHAPE_RE.search(lhs_type)
                 if m:
@@ -205,13 +242,6 @@ _FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
              "opt-barrier"}
 
 
-def _operand_names(line: str) -> list[str]:
-    m = _OPERANDS_RE.search(line)
-    if not m:
-        return []
-    return [x.strip().lstrip("%") for x in m.group(1).split(",")]
-
-
 def _instr_bytes(ins: Instr, comp: Computation) -> float:
     """Approximate HBM traffic of one instruction (operands + output).
 
@@ -221,7 +251,7 @@ def _instr_bytes(ins: Instr, comp: Computation) -> float:
     """
     _, out_b = _shape_elems_bytes(ins.type_str)
     if ins.opcode == "dynamic-update-slice":
-        ops = _operand_names(ins.line)
+        ops = _operand_names(ins)
         upd_b = 0
         if len(ops) >= 2:
             t = comp.shapes.get(ops[1])
@@ -231,7 +261,7 @@ def _instr_bytes(ins: Instr, comp: Computation) -> float:
     if ins.opcode == "dynamic-slice":
         return 2.0 * out_b
     total = float(out_b)
-    for name in _operand_names(ins.line):
+    for name in _operand_names(ins):
         t = comp.shapes.get(name)
         if t:
             _, b = _shape_elems_bytes(t)

@@ -1,0 +1,116 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+Degrades ``@given`` to a small fixed-example sweep: the first example is the
+minimal one each strategy can produce, the rest are drawn from a PRNG seeded
+by the test's qualified name, so failures reproduce across runs and machines.
+``conftest.py`` installs this module as ``hypothesis`` in ``sys.modules``
+only when the real library is absent (see requirements-dev.txt); with the
+real library installed this file is inert.
+
+Only the API surface the test-suite uses is provided: ``given``,
+``settings`` (``max_examples``/``deadline`` accepted, deadline ignored) and
+``strategies.{integers,binary,lists,booleans,floats,sampled_from}``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+_SWEEP_CAP = 10          # fallback examples per test (real hypothesis: 100s)
+
+
+class _Strategy:
+    def __init__(self, gen, minimal):
+        self._gen = gen
+        self._minimal = minimal
+
+    def example(self, rng, minimal=False):
+        return self._minimal(rng) if minimal else self._gen(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        lambda rng: int(min_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)), lambda rng: False)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    span = max_value - min_value
+    return _Strategy(lambda rng: float(min_value + span * rng.random()),
+                     lambda rng: float(min_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                     lambda rng: elements[0])
+
+
+def binary(min_size=0, max_size=None):
+    mx = min_size + 16 if max_size is None else max_size
+
+    def gen(rng):
+        n = int(rng.integers(min_size, mx + 1))
+        return rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+
+    return _Strategy(gen, lambda rng: bytes(min_size))
+
+
+def lists(elements, min_size=0, max_size=None):
+    mx = min_size + 8 if max_size is None else max_size
+
+    def gen(rng):
+        n = int(rng.integers(min_size, mx + 1))
+        return [elements.example(rng) for _ in range(n)]
+
+    def minimal(rng):
+        return [elements.example(rng, minimal=True) for _ in range(min_size)]
+
+    return _Strategy(gen, minimal)
+
+
+def settings(max_examples=_SWEEP_CAP, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kwstrats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run():
+            n = min(getattr(run, "_fallback_max_examples",
+                            getattr(fn, "_fallback_max_examples",
+                                    _SWEEP_CAP)), _SWEEP_CAP)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for i in range(max(int(n), 1)):
+                minimal = i == 0
+                args = [s.example(rng, minimal) for s in strats]
+                kw = {k: s.example(rng, minimal)
+                      for k, s in sorted(kwstrats.items())}
+                fn(*args, **kw)
+
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution: the wrapper itself takes no arguments
+        run.__signature__ = inspect.Signature()
+        if hasattr(run, "__wrapped__"):
+            del run.__wrapped__
+        return run
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, binary=binary, lists=lists, booleans=booleans,
+    floats=floats, sampled_from=sampled_from)
+
+HealthCheck = types.SimpleNamespace(all=staticmethod(lambda: []))

@@ -1,0 +1,204 @@
+"""Event-driven coordinator tests: oracle parity, deterministic virtual
+time under any executor width, wall-clock speedup from the thread pool,
+shared-slot-pool multi-query contention, and plan-reuse safety."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import make_engine, oracle, run_query
+from repro.core.stragglers import StragglerConfig
+from repro.core.worker import Worker
+from repro.relational.table import DictColumn
+from repro.relational.tpch import QUERIES
+
+SF = 0.002
+TB = 200_000
+
+
+def _canon(t):
+    cols = {}
+    for n in sorted(t.column_names()):
+        c = t[n]
+        cols[n] = np.asarray(c.codes if isinstance(c, DictColumn) else c,
+                             np.float64)
+    if not cols:
+        return cols
+    order = np.lexsort(tuple(cols.values()))
+    return {n: v[order] for n, v in cols.items()}
+
+
+def _counts(res):
+    return (res.cost.gets, res.cost.puts, res.task_count, res.backup_count)
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("qname", ["q3", "q5", "q12"])
+def test_results_and_counts_match_oracle_any_width(qname):
+    """(a) identical query results and request counts to the oracle,
+    independent of executor width."""
+    baseline = None
+    for width in (1, 8):
+        coord, tables = make_engine(sf=SF, seed=7, target_bytes=TB,
+                                    compute_scale=0.0,
+                                    executor_workers=width)
+        kw = {"shuffle": {"strategy": "multi", "p": 0.5, "f": 0.5}} \
+            if qname == "q12" else {}
+        res = run_query(coord, qname, {"join": 8}, **kw)
+        got, want = _canon(res.result), _canon(oracle(qname, tables))
+        assert sorted(got) == sorted(want)
+        for n in want:
+            np.testing.assert_allclose(got[n], want[n], rtol=1e-9,
+                                       atol=1e-6, err_msg=f"{qname}:{n}")
+        if baseline is None:
+            baseline = _counts(res)
+        else:
+            assert _counts(res) == baseline, \
+                f"{qname}: request counts depend on executor width"
+
+
+# ------------------------------------------------------------- determinism
+@pytest.mark.parametrize("qname", ["q3", "q5"])
+def test_virtual_latency_deterministic_across_widths(qname):
+    """(b) with compute_scale=0 the virtual clock is a pure function of the
+    seed: latency, stage windows and costs are bit-identical whether tasks
+    run on 1, 2 or 8 executor threads."""
+    ref = None
+    for width in (1, 2, 8):
+        coord, _ = make_engine(sf=SF, seed=11, target_bytes=TB,
+                               compute_scale=0.0, executor_workers=width)
+        res = run_query(coord, qname, {"join": 8})
+        sig = (res.latency_s, res.cost.total, res.stage_times, _counts(res))
+        if ref is None:
+            ref = sig
+        else:
+            assert sig == ref, f"{qname}: width changed virtual time"
+
+
+def test_deterministic_under_contention():
+    """Determinism must survive slot starvation (queued tasks) + backups."""
+    ref = None
+    for width in (1, 8):
+        coord, _ = make_engine(sf=SF, seed=5, target_bytes=TB,
+                               compute_scale=0.0, executor_workers=width,
+                               max_parallel=3)
+        res = run_query(coord, "q12", {"join": 8})
+        sig = (res.latency_s, res.stage_times, _counts(res))
+        if ref is None:
+            ref = sig
+        else:
+            assert sig == ref
+
+
+# ------------------------------------------------------------ wall clock
+def test_wallclock_speedup_with_executor_threads(monkeypatch):
+    """(c) real task work overlaps on the pool: q3+q5 with a simulated
+    100ms-of-real-work-per-task worker run >=2x faster at 8 threads."""
+    real_scan, real_join = Worker.run_scan, Worker.run_join
+
+    def slow_scan(self, *a, **kw):
+        time.sleep(0.05)
+        return real_scan(self, *a, **kw)
+
+    def slow_join(self, *a, **kw):
+        time.sleep(0.05)
+        return real_join(self, *a, **kw)
+
+    monkeypatch.setattr(Worker, "run_scan", slow_scan)
+    monkeypatch.setattr(Worker, "run_join", slow_join)
+
+    def run_all(width):
+        t0 = time.perf_counter()
+        sigs = []
+        for qname in ("q3", "q5"):
+            coord, _ = make_engine(sf=SF, seed=13, target_bytes=TB,
+                                   compute_scale=0.0,
+                                   executor_workers=width)
+            res = run_query(coord, qname, {"join": 16})
+            sigs.append((res.latency_s, _counts(res)))
+        return time.perf_counter() - t0, sigs
+
+    serial_s, serial_sig = run_all(1)
+    par_s, par_sig = run_all(8)
+    assert serial_sig == par_sig          # same virtual outcome...
+    speedup = serial_s / par_s
+    assert speedup >= 2.0, f"wall-clock speedup only {speedup:.2f}x"
+
+
+# ----------------------------------------------------------- multi-query
+def test_run_queries_shares_one_slot_pool():
+    """Concurrent streams contend for the invocation limit (§6.5): the
+    same workload on a starved shared pool has a strictly larger makespan
+    than on an ample one, and every stream still returns correct rows."""
+    def makespan(max_parallel):
+        coord, tables = make_engine(sf=SF, seed=9, target_bytes=TB,
+                                    compute_scale=0.0,
+                                    max_parallel=max_parallel)
+        plans = [QUERIES["q12"]({"join": 8}) for _ in range(3)]
+        arrivals = [0.0, 0.05, 0.10]
+        results = coord.run_queries(plans, arrival_times=arrivals)
+        want = _canon(oracle("q12", tables))
+        for res in results:
+            got = _canon(res.result)
+            for n in want:
+                np.testing.assert_allclose(got[n], want[n], rtol=1e-9,
+                                           atol=1e-6)
+        return max(a + r.latency_s for a, r in zip(arrivals, results))
+
+    ample = makespan(1000)
+    starved = makespan(4)
+    assert starved > ample * 1.5, (starved, ample)
+
+
+def test_run_queries_preserves_order_and_isolation():
+    coord, tables = make_engine(sf=SF, seed=21, target_bytes=TB,
+                                compute_scale=0.0)
+    plans = [QUERIES[q]() for q in ("q1", "q6")]
+    r1, r6 = coord.run_queries(plans)
+    assert r1.name == "q1" and r6.name == "q6"
+    for qname, res in (("q1", r1), ("q6", r6)):
+        got, want = _canon(res.result), _canon(oracle(qname, tables))
+        for n in want:
+            np.testing.assert_allclose(got[n], want[n], rtol=1e-9,
+                                       atol=1e-6)
+
+
+# ------------------------------------------------------------ plan reuse
+def test_rerunning_same_plan_object_is_safe():
+    """Regression: combiner stages used to be spliced into the CALLER's
+    plan dict, so a second run_query on the same q12 multi-shuffle plan
+    duplicated stages and corrupted validate_plan."""
+    import copy
+
+    from repro.core.plan import validate_plan
+
+    coord, tables = make_engine(sf=SF, seed=17, target_bytes=TB,
+                                compute_scale=0.0)
+    plan = QUERIES["q12"]({"join": 8},
+                          shuffle={"strategy": "multi", "p": 0.5, "f": 0.5})
+    pristine = copy.deepcopy(plan)
+    want = _canon(oracle("q12", tables))
+    for _ in range(2):
+        res = coord.run_query(plan)
+        validate_plan(plan)
+        got = _canon(res.result)
+        for n in want:
+            np.testing.assert_allclose(got[n], want[n], rtol=1e-9,
+                                       atol=1e-6)
+    assert plan == pristine, "run_query mutated the caller's plan"
+
+
+def test_degenerate_shuffle_splits_clamped():
+    """p/f finer than the producer/consumer counts must not produce
+    zero-width combiner ranges (satellite: shuffle guard)."""
+    from repro.core.shuffle import combiner_assignment, multi_stage
+
+    plan = multi_stage(2, 3, 1.0 / 8, 1.0 / 8)   # a,b >> r,s
+    assign = combiner_assignment(plan)
+    covered = set()
+    for spec in assign:
+        lo, hi = spec["partitions"]
+        flo, fhi = spec["files"]
+        assert hi > lo and fhi > flo
+        covered |= {(p, f) for p in range(lo, hi) for f in range(flo, fhi)}
+    assert covered == {(p, f) for p in range(3) for f in range(2)}
