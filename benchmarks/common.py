@@ -4,10 +4,13 @@ from __future__ import annotations
 import numpy as np
 
 ROWS: list[str] = []
+RECORDS: list[tuple[str, float, str]] = []   # structured (name, value,
+#                                              derived) for run.py --json
 
 
 def emit(name: str, value: float, derived: str = ""):
     """One CSV row: name,us_per_call,derived (per benchmarks/run.py spec)."""
+    RECORDS.append((name, float(value), derived))
     row = f"{name},{value:.6g},{derived}"
     ROWS.append(row)
     print(row, flush=True)

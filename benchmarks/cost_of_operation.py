@@ -5,9 +5,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, geomean
-from repro.core.cost import (PROVISIONED, max_queries_per_hour,
-                             provisioned_cost_per_query,
-                             provisioned_daily_cost, starling_daily_cost)
+from repro.core.cost import (break_even_interarrival, daily_cost,
+                             max_queries_per_hour,
+                             provisioned_cost_per_query)
 from benchmarks.query_latency import run_all
 
 
@@ -19,10 +19,9 @@ def main(quick: bool = False):
 
     # Fig 7a: crossover rate where a provisioned cluster becomes cheaper.
     for sys_ in ("redshift-dc-dk", "redshift-ds-dk", "presto-16", "presto-4"):
-        daily = provisioned_daily_cost(sys_)
-        # starling_daily = 8 + cpq * qph * 24 == daily  =>  qph*
-        qph = max((daily - 8.0) / (cpq * 24.0), 0.0)
-        emit(f"fig7_crossover_qph_{sys_}", qph,
+        daily = daily_cost(sys_, float("inf"))
+        ia = break_even_interarrival(sys_, cpq)
+        emit(f"fig7_crossover_qph_{sys_}", 3600.0 / ia,
              f"daily(provisioned)=${daily:.0f}; paper: ~60 qph vs redshift "
              "at 1TB")
 

@@ -1,21 +1,29 @@
 """Run every benchmark (one module per paper table/figure) and print the
-``name,us_per_call,derived`` CSV. ``--quick`` shrinks sizes for CI."""
+``name,us_per_call,derived`` CSV. ``--quick`` shrinks sizes for CI;
+``--only`` takes a comma-separated module list; ``--json PATH`` also
+writes the emitted rows as machine-readable JSON (name -> value ->
+derived) so the perf trajectory can be tracked across commits."""
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (e.g. "
+                         "BENCH_workload.json)")
     args = ap.parse_args()
 
-    from benchmarks import (concurrency, cost_of_operation, optimizations,
-                            parallel_reads, query_latency, roofline,
-                            scalability, shuffle_cost, straggler_cdf,
-                            tunable)
+    from benchmarks import (breakeven, concurrency, cost_of_operation,
+                            optimizations, parallel_reads, query_latency,
+                            roofline, scalability, shuffle_cost,
+                            straggler_cdf, tunable, workload)
     mods = [("parallel_reads", parallel_reads),
             ("straggler_cdf", straggler_cdf),
             ("shuffle_cost", shuffle_cost),
@@ -23,22 +31,38 @@ def main() -> None:
             ("cost_of_operation", cost_of_operation),
             ("scalability", scalability),
             ("concurrency", concurrency),
+            ("workload", workload),
+            ("breakeven", breakeven),
             ("tunable", tunable),
             ("optimizations", optimizations),
             ("roofline", roofline)]
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - {name for name, _ in mods}
+        if unknown:
+            raise SystemExit(f"unknown benchmark(s): {sorted(unknown)}")
     print("name,us_per_call,derived")
-    for name, mod in mods:
-        if args.only and args.only != name:
-            continue
-        t0 = time.time()
-        try:
-            mod.main(quick=args.quick)
-            print(f"bench_{name}_wall_s,{time.time()-t0:.2f},ok",
-                  flush=True)
-        except Exception as e:  # noqa: BLE001 — a bench failure is a result
-            print(f"bench_{name}_wall_s,{time.time()-t0:.2f},FAILED {e!r}",
-                  flush=True)
-            raise
+    try:
+        for name, mod in mods:
+            if only and name not in only:
+                continue
+            t0 = time.time()
+            try:
+                mod.main(quick=args.quick)
+                print(f"bench_{name}_wall_s,{time.time()-t0:.2f},ok",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — a failure is a result
+                print(f"bench_{name}_wall_s,{time.time()-t0:.2f},"
+                      f"FAILED {e!r}", flush=True)
+                raise
+    finally:
+        if args.json:
+            from benchmarks.common import RECORDS
+            with open(args.json, "w") as f:
+                json.dump({name: {"value": value, "derived": derived}
+                           for name, value, derived in RECORDS},
+                          f, indent=1, sort_keys=True)
+            print(f"# wrote {len(RECORDS)} rows to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,49 @@
+"""Workload subsystem benchmark (ROADMAP: multi-query beyond uniform
+arrival): the TPC-H mix under uniform / Poisson / bursty open-loop
+arrivals on ONE shared invocation-slot pool, reporting latency and
+queue-delay percentiles, throughput, and $/query per arrival process."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.engine import make_engine
+from repro.workload import (TPCH_MIX, WorkloadDriver, bursty, poisson,
+                            sample_mix, uniform)
+
+LIMIT = 8                  # scaled account-level parallel-invocation limit:
+#                            tight enough that arrivals queue for slots at
+#                            the quick sizes (queue-delay percentiles bind)
+DATA_SEED = 7              # dataset fixed across processes (no confound)
+
+
+def run_mix(arrival_name: str, n: int, sf: float, gap_s: float,
+            seed: int = 0):
+    procs = {"uniform": lambda: uniform(n, gap_s),
+             "poisson": lambda: poisson(n, gap_s, seed=seed),
+             "bursty": lambda: bursty(n, gap_s, seed=seed)}
+    coord, _ = make_engine(sf=sf, seed=seed, data_seed=DATA_SEED,
+                           max_parallel=LIMIT, target_bytes=1 << 20,
+                           executor_workers=8)
+    classes = sample_mix(TPCH_MIX, n, seed=seed)
+    return WorkloadDriver(coord).run(classes, procs[arrival_name]())
+
+
+def main(quick: bool = False):
+    sf = 0.002 if quick else 0.005
+    n = 8 if quick else 24
+    gap = 0.25            # mean inter-arrival: tight enough to contend
+    for proc in ("uniform", "poisson", "bursty"):
+        wl = run_mix(proc, n, sf, gap, seed=3)
+        s = wl.summary
+        emit(f"workload_{proc}_latency_p50_s", s["latency_s_p50"],
+             f"p90={s['latency_s_p90']:.2f}s p99={s['latency_s_p99']:.2f}s "
+             f"n={n} gap={gap}s")
+        emit(f"workload_{proc}_queue_delay_p90_s", s["queue_delay_s_p90"],
+             f"mean={s['queue_delay_s_mean']:.3f}s; slot pool limit="
+             f"{LIMIT}")
+        emit(f"workload_{proc}_qph", s["queries_per_hour"],
+             f"cost/query=${s['cost_per_query']:.5f}; backups="
+             f"{s['backup_count']} ({s['backup_slot_s']:.2f} slot-s)")
+
+
+if __name__ == "__main__":
+    main()

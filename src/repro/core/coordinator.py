@@ -16,13 +16,16 @@ serial loop of the original implementation. Scheduling decisions are events:
     quorum (``StragglerConfig.backup_quorum``) of a stage's tasks has
     finished, the coordinator estimates the stage median and arms a timer
     per straggling task; when it fires, a duplicate (virtual) invocation
-    races the original and completion is the min (the store's conditional
-    PUT makes the first writer win).
+    claims a real slot from the shared pool (skipped when the account is at
+    its invocation limit), races the original, and completion is the min
+    (the store's conditional PUT makes the first writer win) — so §6.5
+    contention includes mitigation overhead.
 
 Invocation limiting (§4.3) is an O(log n) free-slot heap shared by every
 concurrently running query — ``run_queries`` models the paper's §6.5
-multi-tenant workload: one slot pool, per-query arrival times — instead of
-an O(max_parallel) argmin scan per task.
+multi-tenant workload: one slot pool, per-query arrival times, and
+optional closed-loop ``after=`` stream dependencies — instead of an
+O(max_parallel) argmin scan per task.
 
 Real task work (``Worker.run_*``) executes on a ``ThreadPoolExecutor`` so
 wall-clock scales with cores, while *virtual* time stays deterministic:
@@ -90,10 +93,17 @@ class QueryResult:
     backup_count: int
     stage_times: dict
     task_seconds: float
+    arrival_s: float = 0.0       # virtual arrival (t0, or closed-loop start)
+    queue_delay_s: float = 0.0   # arrival -> first task start (slot wait)
+    backup_slot_s: float = 0.0   # slot-seconds claimed by backup duplicates
 
     @property
     def dollars(self) -> float:
         return self.cost.total
+
+    @property
+    def finish_s(self) -> float:
+        return self.arrival_s + self.latency_s
 
 
 @dataclasses.dataclass
@@ -141,6 +151,8 @@ class _Run:
         self.final_result = None
         self.stage_windows: dict[str, tuple[float, float]] = {}
         self.finish_t = t0
+        self.first_start = math.inf    # earliest task start (sans overhead)
+        self.backup_slot_s = 0.0       # slot-seconds held by §5 duplicates
 
     def consumers_of(self, name: str) -> list[_Stage]:
         return [s for s in self.stages if name in s.st["deps"]]
@@ -240,12 +252,21 @@ class Coordinator:
 
     def run_queries(self, plans: list[dict],
                     arrival_times: list[float] | None = None,
+                    after: list[tuple[int, float] | None] | None = None,
                     ) -> list[QueryResult]:
         """Run several queries against ONE shared invocation-slot pool.
 
         ``arrival_times[i]`` offsets query i's root stages in virtual time
         (paper §6.5: concurrent streams contend for the account-level
         parallel-invocation limit). Results keep the order of ``plans``.
+
+        ``after[i] = (j, think_s)`` makes query i *closed-loop*: it arrives
+        exactly ``think_s`` virtual seconds after query j finishes (j < i),
+        inside the same event loop — so paper-Fig-13-style N-stream
+        closed-loop workloads contend for the one slot pool with no
+        cross-wave approximation. ``arrival_times[i]`` is ignored for such
+        entries; the realised arrival is reported in
+        ``QueryResult.arrival_s``.
         """
         if not plans:
             return []
@@ -253,8 +274,25 @@ class Coordinator:
         if len(arrivals) != len(plans):
             raise ValueError(f"{len(plans)} plans but {len(arrivals)} "
                              "arrival times")
+        afters = list(after or [None] * len(plans))
+        if len(afters) != len(plans):
+            raise ValueError(f"{len(plans)} plans but {len(afters)} "
+                             "after entries")
+        deps_map: dict[int, list[tuple[int, float]]] = {}
+        for i, dep in enumerate(afters):
+            if dep is None:
+                continue
+            j, think = dep
+            if not 0 <= j < i:
+                raise ValueError(f"after[{i}]={dep!r}: must reference an "
+                                 "earlier plan index")
+            if think < 0:
+                raise ValueError(f"after[{i}]: negative think time {think}")
+            deps_map.setdefault(j, []).append((i, float(think)))
         runs: list[_Run] = []
         for ridx, (plan, arr) in enumerate(zip(plans, arrivals)):
+            if afters[ridx] is not None:
+                arr = math.nan          # set when the upstream run finishes
             validate_plan(plan)
             seen = self._name_counts.get(plan["name"], 0)
             self._name_counts[plan["name"]] = seen + 1
@@ -270,18 +308,16 @@ class Coordinator:
                 run.ends[stage.st["name"]] = [0.0] * stage.n
             runs.append(run)
 
-        slots = [min(arrivals)] * self.max_parallel
+        open_loop = [a for a, dep in zip(arrivals, afters) if dep is None]
+        slots = [min(open_loop)] * self.max_parallel
         heapq.heapify(slots)
         events: list[tuple] = []              # (t, kind, ridx, sidx, tidx)
         pending: deque[tuple[int, int, int]] = deque()   # tasks w/o a slot
         outstanding: dict = {}                # future -> (run, stage, tidx)
 
         for run in runs:
-            for stage in run.stages:
-                if not stage.st["deps"]:
-                    stage.ready_pushed = True
-                    heapq.heappush(events,
-                                   (run.t0, _READY, run.ridx, stage.sidx, 0))
+            if not math.isnan(run.t0):
+                self._activate(run, run.t0, events)
 
         with ThreadPoolExecutor(max_workers=self.executor_workers) as pool:
             while events or outstanding:
@@ -303,9 +339,9 @@ class Coordinator:
                                    outstanding)
                 elif kind == _DONE:
                     self._on_done(runs, run, stage, tidx, t, events, slots,
-                                  pending, pool, outstanding)
+                                  pending, pool, outstanding, deps_map)
                 else:
-                    self._on_backup(run, stage, tidx, t, events)
+                    self._on_backup(run, stage, tidx, t, events, slots)
 
         return [self._finish(run) for run in runs]
 
@@ -332,6 +368,16 @@ class Coordinator:
             self._resolve(run, stage, tidx, f.result(), events)
 
     @staticmethod
+    def _activate(run: _Run, t0: float, events):
+        """Arm a run's root stages at virtual time t0 (query arrival)."""
+        run.t0 = t0
+        run.finish_t = t0
+        for stage in run.stages:
+            if not stage.st["deps"]:
+                stage.ready_pushed = True
+                heapq.heappush(events, (t0, _READY, run.ridx, stage.sidx, 0))
+
+    @staticmethod
     def _deps_resolved(run: _Run, stage: _Stage) -> bool:
         return all(tk.resolved for dep in stage.st["deps"]
                    for tk in run.by_name[dep].tasks)
@@ -355,8 +401,9 @@ class Coordinator:
         while pending and slots:
             ridx, sidx, tidx = pending.popleft()
             run, stage = runs[ridx], runs[ridx].stages[sidx]
-            start = max(heapq.heappop(slots), stage.ready_t, now) \
-                + INVOKE_OVERHEAD_S
+            t_slot = max(heapq.heappop(slots), stage.ready_t, now)
+            run.first_start = min(run.first_start, t_slot)
+            start = t_slot + INVOKE_OVERHEAD_S
             self._dispatch(run, stage, tidx, start, pool, outstanding)
             # the stage's backup timers were armed before this task even
             # started: arm its own straggler timer now (stale-checked at
@@ -377,8 +424,10 @@ class Coordinator:
             if not slots:
                 pending.append((run.ridx, stage.sidx, ti))
                 continue
-            start = max(heapq.heappop(slots), t) + INVOKE_OVERHEAD_S
-            self._dispatch(run, stage, ti, start, pool, outstanding)
+            t_slot = max(heapq.heappop(slots), t)
+            run.first_start = min(run.first_start, t_slot)
+            self._dispatch(run, stage, ti, t_slot + INVOKE_OVERHEAD_S,
+                           pool, outstanding)
 
     def _resolve(self, run: _Run, stage: _Stage, tidx: int, r: TaskResult,
                  events):
@@ -402,7 +451,7 @@ class Coordinator:
                                 tidx))
 
     def _on_done(self, runs, run: _Run, stage: _Stage, tidx: int, t: float,
-                 events, slots, pending, pool, outstanding):
+                 events, slots, pending, pool, outstanding, deps_map=None):
         task = stage.tasks[tidx]
         if task.done or abs(t - task.end) > _EPS:
             return                        # stale event (backup rescheduled)
@@ -434,23 +483,45 @@ class Coordinator:
 
         if stage.done == stage.n:
             self._finish_stage(run, stage)
+            if stage.st is run.plan["stages"][-1] and deps_map:
+                # closed-loop streams: the next query in the stream arrives
+                # think_s after this one finishes
+                for di, think in deps_map.get(run.ridx, ()):
+                    self._activate(runs[di], run.finish_t + think, events)
         self._check_consumers(run, stage.st["name"], events, t)
 
     def _on_backup(self, run: _Run, stage: _Stage, tidx: int, t: float,
-                   events):
+                   events, slots):
         """BACKUP_FIRE: duplicate a straggling task; completion is the min
-        of original and duplicate (first conditional PUT wins)."""
+        of original and duplicate (first conditional PUT wins).
+
+        The duplicate is a real invocation: it must claim a slot from the
+        shared free-slot heap, so §6.5 contention includes mitigation
+        overhead. If the account is at its invocation limit (no free slot —
+        the heap is drained whenever tasks are queued) the coordinator
+        skips the duplicate rather than queueing mitigation behind fresh
+        work. A claimed slot stays busy for the duplicate's full run even
+        when the original wins (Lambda invocations cannot be cancelled);
+        billing (task_seconds) stops at the losing writer's conditional
+        PUT, which is why slot-seconds are tracked separately in
+        ``backup_slot_s``.
+        """
         task = stage.tasks[tidx]
         if task.done or task.end <= t + _EPS:
             return
+        if not slots:
+            return                          # at the invocation limit
         dup = stage.median * self._slowdown(
-            self._task_rng(run, stage.sidx, tidx, 2)) + INVOKE_OVERHEAD_S
+            self._task_rng(run, stage.sidx, tidx, 2))
+        start = max(heapq.heappop(slots), t) + INVOKE_OVERHEAD_S
+        heapq.heappush(slots, start + dup)
         run.backups += 1
         run.invocations += 1
         run.gets += task.result.gets        # duplicate re-reads its inputs
         run.puts += task.result.puts
         run.task_seconds += min(dup, task.dur)
-        new_end = min(task.end, t + dup)
+        run.backup_slot_s += dup
+        new_end = min(task.end, start + dup)
         if new_end < task.end - _EPS:
             task.end = new_end              # original DONE event goes stale
             run.ends[stage.st["name"]][tidx] = new_end
@@ -491,12 +562,14 @@ class Coordinator:
     def _finish(self, run: _Run) -> QueryResult:
         cost = QueryCost(run.task_seconds * WORKER_MEM_GB, run.invocations,
                          run.gets, run.puts)
+        queue_delay = 0.0 if math.isinf(run.first_start) \
+            else max(0.0, run.first_start - run.t0)
         return QueryResult(
             run.display_name, run.finish_t - run.t0, run.final_result, cost,
             run.invocations - run.backups, run.backups,
             {k: (round(a - run.t0, 3), round(b - run.t0, 3))
              for k, (a, b) in run.stage_windows.items()},
-            run.task_seconds)
+            run.task_seconds, run.t0, queue_delay, run.backup_slot_s)
 
     # ---------------------------------------------------------- task build
     def _build_task(self, run: _Run, st, ti, w: Worker, start):

@@ -49,24 +49,76 @@ class QueryCost:
         return self.lambda_cost + self.s3_cost
 
 
+# ---------------------------------------------------------------------------
+# daily-cost curves (Figs 7/10/14): ONE API for Starling and every
+# provisioned config, parameterized by the workload's inter-arrival time.
+# The workload subsystem (repro.workload.pricing) builds its frontier on
+# these; keep closed forms here so tests can cross-check numeric solvers.
+# ---------------------------------------------------------------------------
+
+STARLING = "starling"
+
+
+def queries_per_day(interarrival_s: float) -> float:
+    return 86400.0 / max(interarrival_s, 1e-9)
+
+
+def daily_cost(system: str, interarrival_s: float, *,
+               cost_per_query: float = 0.0, scan_tb: float = 0.0) -> float:
+    """$/day to serve one query every ``interarrival_s`` seconds.
+
+    ``system`` is ``"starling"`` or a ``PROVISIONED`` key. Starling pays
+    the coordinator VM plus a purely per-query cost (``cost_per_query``,
+    measured by the engine); a provisioned cluster bills flat while idle,
+    plus any per-TB scan charge (Spectrum/Athena-style) per query.
+    """
+    qpd = queries_per_day(interarrival_s)
+    if system == STARLING:
+        return COORDINATOR_PER_DAY + cost_per_query * qpd
+    p = PROVISIONED[system]
+    return p["rate"] * p["nodes"] * 24.0 \
+        + p.get("scan_per_tb", 0.0) * scan_tb * qpd
+
+
+def daily_cost_curve(system: str, interarrivals, *,
+                     cost_per_query: float = 0.0, scan_tb: float = 0.0
+                     ) -> list[float]:
+    return [daily_cost(system, ia, cost_per_query=cost_per_query,
+                       scan_tb=scan_tb) for ia in interarrivals]
+
+
+def break_even_interarrival(system: str, cost_per_query: float,
+                            scan_tb: float = 0.0) -> float:
+    """Closed form: the inter-arrival time above which Starling's daily
+    cost drops below ``system``'s (Fig 7's crossover). 0.0 means Starling
+    is always cheaper; ``inf`` means never (coordinator VM alone exceeds
+    the cluster)."""
+    p = PROVISIONED[system]
+    flat = p["rate"] * p["nodes"] * 24.0 - COORDINATOR_PER_DAY
+    marginal = cost_per_query - p.get("scan_per_tb", 0.0) * scan_tb
+    if marginal <= 0:
+        return 0.0
+    if flat <= 0:
+        return float("inf")
+    return 86400.0 * marginal / flat
+
+
 def starling_daily_cost(cost_per_query: float, queries_per_hour: float
                         ) -> float:
-    return COORDINATOR_PER_DAY + cost_per_query * queries_per_hour * 24.0
+    return daily_cost(STARLING, 3600.0 / max(queries_per_hour, 1e-9),
+                      cost_per_query=cost_per_query)
 
 
 def provisioned_daily_cost(system: str) -> float:
-    p = PROVISIONED[system]
-    return p["rate"] * p["nodes"] * 24.0
+    return daily_cost(system, float("inf"))
 
 
 def provisioned_cost_per_query(system: str, interarrival_s: float,
                                scan_tb: float = 0.0) -> float:
     """Cost attributed to one query when queries arrive every
     `interarrival_s` seconds (the cluster bills while idle too)."""
-    p = PROVISIONED[system]
-    c = p["rate"] * p["nodes"] * interarrival_s / 3600.0
-    c += p.get("scan_per_tb", 0.0) * scan_tb
-    return c
+    return daily_cost(system, interarrival_s, scan_tb=scan_tb) \
+        / queries_per_day(interarrival_s)
 
 
 def max_queries_per_hour(latency_s: float) -> float:

@@ -42,6 +42,7 @@ def load_base_tables(store: ObjectStore, tables: dict[str, Table],
 
 
 def make_engine(sf: float = 0.002, *, seed: int = 0,
+                data_seed: int | None = None,
                 policy: StragglerConfig | None = None,
                 max_parallel: int = 1000, target_bytes: int = 1 << 20,
                 compute_scale: float = 1.0,
@@ -50,9 +51,13 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
 
     ``compute_scale=0`` makes virtual latency independent of measured
     compute (fully deterministic); ``executor_workers`` sizes the
-    coordinator's thread pool for real task execution.
+    coordinator's thread pool for real task execution. ``seed`` drives the
+    *simulation* randomness (store latencies, stragglers, arrivals);
+    ``data_seed`` (default: ``seed``) drives the generated dataset — pass a
+    fixed ``data_seed`` to vary timing randomness over one dataset, e.g.
+    sweeping contention without also regenerating the data (Fig 13).
     """
-    tables = generate(sf, seed=seed)
+    tables = generate(sf, seed=seed if data_seed is None else data_seed)
     store = ObjectStore(StoreConfig(seed=seed, time_scale=0.0,
                                     simulate_visibility_lag=False))
     splits = load_base_tables(store, tables, target_bytes)

@@ -1,0 +1,34 @@
+"""Workload subsystem: whole-workload generation, execution, and pricing.
+
+The layer between the event-driven scheduler (core.coordinator) and the
+benchmarks — it answers the paper's headline *economic* question (§6.3,
+Figs 7/13/14): at what query rate is a serverless engine cheaper than a
+provisioned cluster?
+
+  * :mod:`repro.workload.arrivals` — seeded arrival processes (uniform /
+    Poisson / bursty on-off / closed-loop N-stream, Fig 13).
+  * :mod:`repro.workload.mix` — weighted query-mix sampling over the TPC-H
+    plans with per-class ``ntasks`` presets (Fig 8's query set).
+  * :mod:`repro.workload.driver` — ``WorkloadDriver``: feeds a sampled
+    workload through ``Coordinator.run_queries`` on ONE shared
+    invocation-slot pool and returns per-query records + percentiles.
+  * :mod:`repro.workload.pricing` — daily-cost curves vs inter-arrival for
+    Starling and every provisioned config, with the Fig-7 break-even
+    frontier solver.
+
+Every future scenario layer (SLA studies, autoscaling the slot limit,
+tenant isolation) plugs in here rather than into the scheduler.
+"""
+from repro.workload.arrivals import (ClosedLoop, bursty, closed_loop,
+                                     poisson, uniform)
+from repro.workload.driver import (QueryRecord, WorkloadDriver,
+                                   WorkloadResult)
+from repro.workload.mix import TPCH_MIX, QueryClass, sample_mix
+from repro.workload.pricing import Frontier, frontier, solve_break_even
+
+__all__ = [
+    "ClosedLoop", "bursty", "closed_loop", "poisson", "uniform",
+    "QueryRecord", "WorkloadDriver", "WorkloadResult",
+    "TPCH_MIX", "QueryClass", "sample_mix",
+    "Frontier", "frontier", "solve_break_even",
+]

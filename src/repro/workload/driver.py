@@ -1,0 +1,125 @@
+"""WorkloadDriver (paper §6.5): a whole workload through ONE slot pool.
+
+Zips a sampled query mix with an arrival process, runs everything through
+``Coordinator.run_queries`` — one shared invocation-slot pool, so streams
+contend for the account-level parallel-invocation limit exactly as in the
+paper's concurrency experiment (Fig 13) — and returns one
+:class:`QueryRecord` per query (arrival, queue delay, latency, cost,
+backup-slot time) plus percentile summaries and workload-level aggregates
+(makespan, queries/hour, mean $/query) that feed the Fig-7 pricing
+frontier (:mod:`repro.workload.pricing`).
+
+Determinism: with ``compute_scale=0`` engines, records are bit-identical
+for any ``executor_workers`` (the coordinator's virtual clock is a pure
+function of the seeds), so workload studies are reproducible byte-for-byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.coordinator import Coordinator, QueryResult
+from repro.core.cost import QueryCost
+from repro.workload.arrivals import ClosedLoop
+from repro.workload.mix import QueryClass
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRecord:
+    """Per-query outcome, in plan order (== arrival order for open loop)."""
+    index: int
+    name: str
+    arrival_s: float
+    queue_delay_s: float        # arrival -> first task start (slot wait)
+    latency_s: float            # arrival -> last task end
+    cost: QueryCost
+    task_count: int
+    backup_count: int
+    backup_slot_s: float        # slot-seconds claimed by §5 duplicates
+
+    @property
+    def finish_s(self) -> float:
+        return self.arrival_s + self.latency_s
+
+    @property
+    def dollars(self) -> float:
+        return self.cost.total
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadResult:
+    records: list[QueryRecord]
+    makespan_s: float           # first arrival -> last finish
+    summary: dict               # percentiles + aggregates (see summarize)
+
+    @property
+    def total_cost(self) -> float:
+        return sum(r.dollars for r in self.records)
+
+    @property
+    def cost_per_query(self) -> float:
+        return self.total_cost / max(len(self.records), 1)
+
+    @property
+    def queries_per_hour(self) -> float:
+        return len(self.records) * 3600.0 / max(self.makespan_s, 1e-9)
+
+
+def summarize(records: list[QueryRecord], makespan_s: float) -> dict:
+    """Percentile summaries (p50/p90/p99) of latency and queue delay, plus
+    the aggregates the pricing layer consumes."""
+    lat = np.asarray([r.latency_s for r in records], np.float64)
+    qd = np.asarray([r.queue_delay_s for r in records], np.float64)
+    total = float(sum(r.dollars for r in records))
+    n = max(len(records), 1)
+    out = {"queries": len(records), "makespan_s": float(makespan_s),
+           "total_cost": total, "cost_per_query": total / n,
+           "queries_per_hour": len(records) * 3600.0 / max(makespan_s,
+                                                           1e-9),
+           "backup_count": int(sum(r.backup_count for r in records)),
+           "backup_slot_s": float(sum(r.backup_slot_s for r in records))}
+    for name, xs in (("latency_s", lat), ("queue_delay_s", qd)):
+        if len(xs):
+            out[f"{name}_mean"] = float(xs.mean())
+            for q in (50, 90, 99):
+                out[f"{name}_p{q}"] = float(np.percentile(xs, q))
+    return out
+
+
+class WorkloadDriver:
+    """Runs (classes, arrivals) on a coordinator's shared slot pool."""
+
+    def __init__(self, coord: Coordinator):
+        self.coord = coord
+
+    def run(self, classes: list[QueryClass],
+            arrivals: list[float] | ClosedLoop) -> WorkloadResult:
+        """``arrivals`` is either absolute arrival times (open loop, same
+        length as ``classes``) or a :class:`ClosedLoop` spec whose
+        ``streams * queries_per_stream`` must equal ``len(classes)``
+        (stream-major order)."""
+        if isinstance(arrivals, ClosedLoop):
+            if arrivals.total != len(classes):
+                raise ValueError(f"{len(classes)} classes but closed loop "
+                                 f"describes {arrivals.total} queries")
+            arrival_times, after = arrivals.lower()
+        else:
+            if len(arrivals) != len(classes):
+                raise ValueError(f"{len(classes)} classes but "
+                                 f"{len(arrivals)} arrival times")
+            arrival_times, after = list(arrivals), None
+        plans = [c.build_plan() for c in classes]
+        results = self.coord.run_queries(plans, arrival_times, after=after)
+        records = [self._record(i, res) for i, res in enumerate(results)]
+        makespan = 0.0 if not records else \
+            max(r.finish_s for r in records) - min(r.arrival_s
+                                                   for r in records)
+        return WorkloadResult(records, makespan,
+                              summarize(records, makespan))
+
+    @staticmethod
+    def _record(i: int, res: QueryResult) -> QueryRecord:
+        return QueryRecord(i, res.name, res.arrival_s, res.queue_delay_s,
+                           res.latency_s, res.cost, res.task_count,
+                           res.backup_count, res.backup_slot_s)

@@ -1,0 +1,209 @@
+"""Workload subsystem tests: seeded arrival-process statistics, executor-
+width invariance of a full WorkloadDriver run, queue-delay invariants,
+closed-loop arrival chaining, slot-aware backup accounting, and
+break-even consistency against the closed forms in core/cost.py."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cost import (PROVISIONED, break_even_interarrival,
+                             daily_cost, provisioned_cost_per_query,
+                             provisioned_daily_cost, starling_daily_cost)
+from repro.core.engine import make_engine
+from repro.core.stragglers import StragglerConfig
+from repro.workload import (TPCH_MIX, QueryClass, WorkloadDriver, bursty,
+                            closed_loop, frontier, poisson, sample_mix,
+                            solve_break_even, uniform)
+
+SF = 0.002
+TB = 200_000
+
+
+def _driver(seed=0, width=None, max_parallel=1000, policy=None):
+    coord, _ = make_engine(sf=SF, seed=seed, target_bytes=TB,
+                           compute_scale=0.0, executor_workers=width,
+                           max_parallel=max_parallel, policy=policy)
+    return WorkloadDriver(coord)
+
+
+def _sig(rec):
+    return (rec.name, rec.arrival_s, rec.queue_delay_s, rec.latency_s,
+            rec.cost.lambda_gb_s, rec.cost.invocations, rec.cost.gets,
+            rec.cost.puts, rec.task_count, rec.backup_count,
+            rec.backup_slot_s)
+
+
+# ------------------------------------------------------- arrival processes
+def test_uniform_arrivals_exact():
+    assert uniform(4, 2.5, start=1.0) == [1.0, 3.5, 6.0, 8.5]
+    assert uniform(0, 10.0) == []
+
+
+def test_poisson_statistics_and_reproducibility():
+    """Seeded Poisson: mean inter-arrival near target, CV near 1."""
+    a = poisson(4000, 30.0, seed=3)
+    assert a == poisson(4000, 30.0, seed=3)          # bit-identical reruns
+    assert a != poisson(4000, 30.0, seed=4)
+    gaps = np.diff([0.0] + a)
+    assert (gaps > 0).all()
+    assert abs(gaps.mean() - 30.0) / 30.0 < 0.1
+    cv = gaps.std() / gaps.mean()
+    assert 0.9 < cv < 1.1, cv
+
+
+def test_bursty_is_overdispersed_but_mean_preserving():
+    """On-off arrivals keep the long-run mean but have CV >> 1."""
+    a = bursty(2000, 30.0, seed=2)
+    assert a == bursty(2000, 30.0, seed=2)
+    gaps = np.diff([0.0] + a)
+    assert (gaps > 0).all()
+    assert abs(gaps.mean() - 30.0) / 30.0 < 0.35
+    assert gaps.std() / gaps.mean() > 1.5            # burstier than Poisson
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError):
+        poisson(4, 0.0)
+    with pytest.raises(ValueError):
+        bursty(4, 10.0, on_fraction=0.0)
+    with pytest.raises(ValueError):
+        closed_loop(0, 4)
+    with pytest.raises(ValueError):
+        closed_loop(2, 2, think_time_s=-1.0)
+
+
+# -------------------------------------------------------------- query mix
+def test_mix_sampling_is_seeded_and_weighted():
+    classes = sample_mix(TPCH_MIX, 500, seed=11)
+    assert classes == sample_mix(TPCH_MIX, 500, seed=11)
+    counts = {c.query: 0 for c in TPCH_MIX}
+    for c in classes:
+        counts[c.query] += 1
+    # q6 (weight 3.0) must dominate q5 (weight 0.5) at n=500
+    assert counts["q6"] > counts["q5"] * 2
+    with pytest.raises(ValueError):
+        QueryClass("q99")
+    with pytest.raises(ValueError):
+        sample_mix([], 5)
+
+
+# ------------------------------------------- driver: executor-width parity
+def test_workload_driver_bit_identical_across_widths():
+    """Acceptance: a fixed-seed WorkloadDriver run produces bit-identical
+    per-query latencies, costs and queue delays for 1 and 8 executors."""
+    classes = sample_mix(TPCH_MIX, 6, seed=5)
+    ref = None
+    for width in (1, 8):
+        wl = _driver(seed=4, width=width, max_parallel=16).run(
+            classes, poisson(6, 1.0, seed=5))
+        sig = [_sig(r) for r in wl.records]
+        if ref is None:
+            ref = sig
+        else:
+            assert sig == ref, "executor width changed workload records"
+
+
+# ------------------------------------------------------------ queue delay
+def test_queue_delay_invariants():
+    """Queue delays are >= 0, zero on an ample pool, and consistent with
+    arrival ordering for identical plans on a starved pool."""
+    classes = [QueryClass("q6", ntasks={"scan": 2})] * 4
+    arrivals = [0.0, 0.01, 0.02, 0.03]
+
+    ample = _driver(seed=6).run(classes, arrivals)
+    assert all(r.queue_delay_s == 0.0 for r in ample.records)
+
+    starved = _driver(seed=6, max_parallel=1).run(classes, arrivals)
+    delays = [r.queue_delay_s for r in starved.records]
+    assert delays[0] == 0.0
+    assert all(d >= 0.0 for d in delays)
+    starts = [r.arrival_s + r.queue_delay_s for r in starved.records]
+    assert starts == sorted(starts), \
+        "FIFO slot queue must serve identical plans in arrival order"
+    assert max(delays) > 0.0
+    assert starved.makespan_s > ample.makespan_s
+
+
+# ------------------------------------------------------------ closed loop
+def test_closed_loop_chains_arrivals_to_finishes():
+    spec = closed_loop(2, 3, think_time_s=0.25, stagger_s=1.0)
+    classes = [QueryClass("q6", ntasks={"scan": 2})] * spec.total
+    wl = _driver(seed=8).run(classes, spec)
+    per_stream = [wl.records[s * 3:(s + 1) * 3] for s in range(2)]
+    for s, recs in enumerate(per_stream):
+        assert recs[0].arrival_s == s * 1.0
+        for prev, cur in zip(recs, recs[1:]):
+            assert cur.arrival_s == pytest.approx(prev.finish_s + 0.25,
+                                                  abs=1e-9)
+
+
+def test_closed_loop_size_mismatch_rejected():
+    with pytest.raises(ValueError):
+        _driver().run([QueryClass("q6")] * 3, closed_loop(2, 2))
+    with pytest.raises(ValueError):
+        _driver().run([QueryClass("q6")] * 3, [0.0, 1.0])
+
+
+def test_empty_workload_is_empty_result():
+    wl = _driver().run([], [])
+    assert wl.records == [] and wl.makespan_s == 0.0
+    assert wl.total_cost == 0.0 and wl.summary["queries"] == 0
+
+
+# ------------------------------------------------- slot-aware backup time
+def test_backup_slot_time_accounting():
+    classes = sample_mix(TPCH_MIX, 5, seed=9)
+    wl = _driver(seed=9, max_parallel=32).run(classes, uniform(5, 0.5))
+    for r in wl.records:
+        assert r.backup_slot_s >= 0.0
+        assert (r.backup_count == 0) == (r.backup_slot_s == 0.0)
+    off = _driver(seed=9, max_parallel=32,
+                  policy=StragglerConfig.all_off()).run(classes,
+                                                        uniform(5, 0.5))
+    assert all(r.backup_count == 0 and r.backup_slot_s == 0.0
+               for r in off.records)
+
+
+# ------------------------------------------------------- pricing frontier
+def test_break_even_solver_matches_closed_form():
+    for cpq in (0.0005, 0.01, 0.29):
+        for sys_ in PROVISIONED:
+            num = solve_break_even(sys_, cpq)
+            closed = break_even_interarrival(sys_, cpq)
+            assert num == pytest.approx(closed, rel=1e-6), (sys_, cpq)
+
+
+def test_frontier_threshold_and_monotonicity():
+    fr = frontier(0.01)
+    star = fr.curves["starling"]
+    assert all(b <= a for a, b in zip(star, star[1:]))
+    assert fr.threshold_s == max(fr.break_even_s.values())
+    assert 0.0 < fr.threshold_s < math.inf
+    assert fr.cheapest_at(fr.threshold_s * 1.01) == "starling"
+    # just below the threshold some provisioned config must win
+    assert fr.cheapest_at(fr.threshold_s * 0.99) != "starling"
+    with pytest.raises(ValueError):
+        frontier(0.01, interarrivals=(10.0, 5.0))
+
+
+def test_frontier_scan_tb_consistent_in_cheapest_at():
+    """Per-TB scan charges must flow into cheapest_at, not just curves."""
+    fr = frontier(6.0, scan_tb=1.0, systems=["spectrum"])
+    want = break_even_interarrival("spectrum", 6.0, scan_tb=1.0)
+    assert fr.threshold_s == pytest.approx(want, rel=1e-6)
+    assert fr.cheapest_at(fr.threshold_s * 1.01) == "starling"
+    assert fr.cheapest_at(fr.threshold_s * 0.99) == "spectrum"
+
+
+def test_daily_cost_wrappers_consistent():
+    assert starling_daily_cost(0.01, 60.0) == \
+        pytest.approx(daily_cost("starling", 60.0, cost_per_query=0.01))
+    for sys_ in PROVISIONED:
+        assert provisioned_daily_cost(sys_) == \
+            pytest.approx(daily_cost(sys_, float("inf")))
+        p = PROVISIONED[sys_]
+        want = p["rate"] * p["nodes"] * 120.0 / 3600.0 \
+            + p.get("scan_per_tb", 0.0) * 0.5
+        assert provisioned_cost_per_query(sys_, 120.0, scan_tb=0.5) == \
+            pytest.approx(want)
