@@ -17,8 +17,11 @@ from repro.workload import (TPCH_MIX, WorkloadDriver, frontier, sample_mix,
 
 
 def measured_cost_per_query(sf: float, n: int, seed: int = 0) -> float:
+    # compute_scale=0 keeps the measured $/query bit-stable across hosts
+    # and Python versions (CI regression gate input)
     coord, _ = make_engine(sf=sf, seed=seed, data_seed=7,
-                           target_bytes=1 << 20, executor_workers=8)
+                           target_bytes=1 << 20, compute_scale=0.0,
+                           executor_workers=8)
     classes = sample_mix(TPCH_MIX, n, seed=seed)
     wl = WorkloadDriver(coord).run(classes, uniform(n, 30.0))
     return wl.cost_per_query

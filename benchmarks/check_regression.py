@@ -1,0 +1,91 @@
+"""CI benchmark-regression gate (ISSUE 3): fail the job when the workload
+numbers drift from the committed baseline.
+
+Usage:
+    python -m benchmarks.check_regression BENCH_workload.json \
+        [--baseline benchmarks/baselines/BENCH_workload.json] \
+        [--tolerance 0.15]
+
+The gated keys are the Fig-7 break-even threshold and the p50/p99 workload
+latencies per arrival process — all emitted from ``compute_scale=0``
+engines, so they are bit-stable across hosts and Python versions: any
+drift beyond the tolerance is a real change to the cost/latency model,
+not noise. If the change is intentional, refresh the baseline (the error
+message carries the exact command) and commit it with the PR that moved
+the numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+BASELINE = "benchmarks/baselines/BENCH_workload.json"
+TOLERANCE = 0.15
+
+# keys that gate the build; everything else in the JSON is informational
+GATED_KEYS = [
+    "fig7_breakeven_threshold_s",
+    "workload_uniform_latency_p50_s",
+    "workload_uniform_latency_p99_s",
+    "workload_poisson_latency_p50_s",
+    "workload_poisson_latency_p99_s",
+    "workload_bursty_latency_p50_s",
+    "workload_bursty_latency_p99_s",
+]
+
+REFRESH = ("to refresh: PYTHONPATH=src python -m benchmarks.run --quick "
+           "--only workload,breakeven --json {baseline} "
+           "&& commit the result")
+
+
+def check(current: dict, baseline: dict, tolerance: float,
+          baseline_path: str) -> list[str]:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    failures = []
+    refresh = REFRESH.format(baseline=baseline_path)
+    for key in GATED_KEYS:
+        if key not in baseline:
+            failures.append(f"{key}: missing from baseline — {refresh}")
+            continue
+        if key not in current:
+            failures.append(f"{key}: missing from current run (benchmark "
+                            "emitted fewer rows than the baseline)")
+            continue
+        base = float(baseline[key]["value"])
+        cur = float(current[key]["value"])
+        denom = max(abs(base), 1e-12)
+        drift = abs(cur - base) / denom
+        if drift > tolerance:
+            failures.append(
+                f"{key}: {cur:.6g} vs baseline {base:.6g} "
+                f"(drift {drift:.1%} > {tolerance:.0%}) — if intentional, "
+                f"{refresh}")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="BENCH_workload.json from this run")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = check(current, baseline, args.tolerance, args.baseline)
+    if failures:
+        print("benchmark regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"benchmark regression gate OK: {len(GATED_KEYS)} keys within "
+          f"{args.tolerance:.0%} of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,6 @@
 time; crossover points against provisioned systems."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, geomean
 from repro.core.cost import (break_even_interarrival, daily_cost,

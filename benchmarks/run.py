@@ -23,9 +23,10 @@ def main() -> None:
     from benchmarks import (breakeven, concurrency, cost_of_operation,
                             optimizations, parallel_reads, query_latency,
                             roofline, scalability, shuffle_cost,
-                            straggler_cdf, tunable, workload)
+                            straggler_cdf, stragglers, tunable, workload)
     mods = [("parallel_reads", parallel_reads),
             ("straggler_cdf", straggler_cdf),
+            ("stragglers", stragglers),
             ("shuffle_cost", shuffle_cost),
             ("query_latency", query_latency),
             ("cost_of_operation", cost_of_operation),

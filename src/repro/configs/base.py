@@ -143,10 +143,16 @@ def register(arch_id: str):
 
 def registry() -> dict[str, Any]:
     # import side-effect registration
-    from repro.configs import (glm4_9b, granite_20b, smollm_135m,  # noqa: F401
-                               starcoder2_3b, llama4_maverick_400b,
-                               deepseek_v2_lite, whisper_tiny, mamba2_2p7b,
-                               qwen2_vl_7b, recurrentgemma_9b)
+    from repro.configs import deepseek_v2_lite  # noqa: F401
+    from repro.configs import glm4_9b  # noqa: F401
+    from repro.configs import granite_20b  # noqa: F401
+    from repro.configs import llama4_maverick_400b  # noqa: F401
+    from repro.configs import mamba2_2p7b  # noqa: F401
+    from repro.configs import qwen2_vl_7b  # noqa: F401
+    from repro.configs import recurrentgemma_9b  # noqa: F401
+    from repro.configs import smollm_135m  # noqa: F401
+    from repro.configs import starcoder2_3b  # noqa: F401
+    from repro.configs import whisper_tiny  # noqa: F401
     return dict(_REGISTRY)
 
 

@@ -1,52 +1,79 @@
-"""Coordinator (paper §2.3, §4.3, §4.4, §5): event-driven task scheduler.
+"""Coordinator (paper §2.3, §3.3, §4.3, §4.4, §5): event-driven scheduler
+down to the *individual store request*.
 
 A single discrete-event loop drives every query: a priority queue of
-``(virtual_time, kind, run, stage, task)`` entries replaces the per-stage
-serial loop of the original implementation. Scheduling decisions are events:
+``(virtual_time, kind, run, stage, task, request)`` entries. Task-level
+events schedule work; request-level events advance each task's recorded
+I/O timeline, so straggler mitigation happens where the paper does it —
+per GET/PUT, preempting mid-request — not by composing latencies privately
+inside the worker.
+
+Event taxonomy (tie-break priority order at equal virtual times):
 
   * ``STAGE_READY`` — fired when every dependency has completed its
-    pipelining quota (§4.4: ``pipeline_fraction`` of the producer's tasks;
-    reads of late inputs still wait on the producers' actual end times via
-    per-input avails). Claims invocation slots and dispatches the stage's
-    tasks onto a thread pool; tasks beyond the slot limit queue FIFO.
-  * ``TASK_DONE`` — a task's (possibly backup-shortened) completion in
-    virtual time; frees its slot, advances pipelining quotas, arms backup
-    timers, finishes stages and queries.
+    pipelining quota (§4.4: ``pipeline_fraction`` of the producer's tasks).
+    Claims invocation slots and dispatches the stage's tasks onto a thread
+    pool; tasks beyond the slot limit queue FIFO.
+  * ``TASK_DONE`` — a task's effective completion (min over the original
+    timeline and any §5 backup duplicate); frees its slot, advances
+    pipelining quotas, wakes reads parked on this producer's output, arms
+    backup timers, finishes stages and queries.
   * ``BACKUP_FIRE`` — §5 straggler mitigation at task granularity: once a
-    quorum (``StragglerConfig.backup_quorum``) of a stage's tasks has
-    finished, the coordinator estimates the stage median and arms a timer
-    per straggling task; when it fires, a duplicate (virtual) invocation
-    claims a real slot from the shared pool (skipped when the account is at
-    its invocation limit), races the original, and completion is the min
-    (the store's conditional PUT makes the first writer win) — so §6.5
-    contention includes mitigation overhead.
+    quorum of a stage's tasks has finished, the coordinator estimates the
+    stage median and arms a timer per straggling task; the duplicate
+    claims a real slot from the shared pool and races the original.
+  * ``VISIBLE_AT`` — §3.3.1 as an event: a GET that would arrive before
+    its object is visible is re-targeted to whichever doublewrite twin
+    becomes visible first, with the 404 polls in between billed as GETs;
+    the read issues at the first poll that finds the object, instead of
+    the task spinning in a poll loop.
+  * ``GET_ISSUE`` / ``GET_DONE`` — one read request occupying one
+    parallel-read lane; ``GET_ISSUE`` samples the request's latency from a
+    key-derived per-request RNG and, when it exceeds the §5.1 RSM timer,
+    arms a ``DUP_FIRE``.
+  * ``PUT_ISSUE`` / ``PUT_DONE`` — one write request (the doublewrite twin
+    is a second request issued in parallel); ``PUT_ISSUE`` samples the
+    send/post-send phases and arms the §5.2 WSM dual-timer ``DUP_FIRE``.
+  * ``DUP_FIRE`` — a duplicate GET/PUT is issued mid-request: completion
+    becomes first-of-two-wins (the loser is cancelled but billed, and
+    itemized in ``QueryResult.dup_gets``/``dup_puts``).
+
+Parallel-read lanes (§3.3) are a schedulable per-task resource: each task
+owns a bounded pool of ``StragglerConfig.parallel_reads`` lanes and the
+scheduler fills free lanes with the task's queued reads (work-conserving,
+not round-robin); a read holds its lane from placement — including any
+availability/visibility wait — until its GET_DONE. Batches within a task
+(header reads -> body reads -> compute -> PUT) stay barriered because the
+later phase needs the earlier phase's real bytes.
+
+A read whose producer has not yet *finished in virtual time* parks on that
+producer task and is re-placed by the producer's TASK_DONE — that is how a
+consumer dispatched early by pipelining still pays the §4.4 wait, without
+the worker ever seeing a latency.
 
 Invocation limiting (§4.3) is an O(log n) free-slot heap shared by every
 concurrently running query — ``run_queries`` models the paper's §6.5
 multi-tenant workload: one slot pool, per-query arrival times, and
-optional closed-loop ``after=`` stream dependencies — instead of an
-O(max_parallel) argmin scan per task.
+optional closed-loop ``after=`` stream dependencies.
 
 Real task work (``Worker.run_*``) executes on a ``ThreadPoolExecutor`` so
 wall-clock scales with cores, while *virtual* time stays deterministic:
-every task draws its latency randomness from an RNG keyed on
-(seed, query, stage index, task index, stream), never from a shared
-sequential stream, so results, request counts and virtual latency are
-identical for any executor width. Determinism invariants:
+the worker moves real bytes and returns its request timeline; every
+latency is then sampled from an RNG keyed on (seed, query, stage, task,
+request, attempt), never from a shared sequential stream, so results,
+request counts and virtual latency are identical for any executor width.
+Determinism invariants:
 
   * the loop pops an event only once no in-flight task could still produce
     an earlier one (event time <= the minimum virtual start among
-    unresolved tasks), and event keys carry (run, stage, task) indices so
-    equal-time ordering is stable;
+    unresolved tasks), and event keys carry (run, stage, task, request)
+    indices so equal-time ordering is stable;
   * the slot heap mutates only at event pops (claim at STAGE_READY /
-    queued dispatch, release at TASK_DONE), never at wall-clock future
-    resolution, so its contents are a pure function of virtual history.
-
-A consumer's virtual start may precede late producer ends (pipelining), but
-its real execution only begins once every producer task has actually run —
-input avails carry the producers' virtual ends, so the simulated read still
-pays the wait. Backup duplicates that fire after a consumer was dispatched
-only shorten the producer's own completion (conservative).
+    queued dispatch, release at TASK_DONE / timeline completion), never at
+    wall-clock future resolution;
+  * a parked read re-placed by its producer's TASK_DONE computes exactly
+    what direct placement would have computed, so wall-clock resolution
+    order never leaks into virtual time.
 
 Multi-stage shuffles (§4.2) are expanded statically: combiner stages are
 spliced into a private working copy of the plan (and into the join's deps),
@@ -72,6 +99,7 @@ from repro.core.cost import WORKER_MEM_GB, QueryCost
 from repro.core.plan import stage_by_name, validate_plan
 from repro.core.stragglers import StragglerConfig
 from repro.core.worker import PartInput, TaskResult, Worker
+from repro.objectstore.latency import poll_until_visible, visible_twin
 from repro.objectstore.store import ObjectStore
 from repro.relational.table import Table, deserialize_table
 
@@ -79,7 +107,8 @@ INVOKE_OVERHEAD_S = 0.030            # Lambda invoke + runtime startup
 COLD_STRAGGLER_PROB = 0.01           # slow-worker tail (backup-task target)
 
 # event kinds, in tie-break priority order at equal virtual times
-_READY, _DONE, _BACKUP = 0, 1, 2
+(_READY, _DONE, _BACKUP, _VISIBLE, _GET_ISSUE, _PUT_ISSUE, _DUP,
+ _GET_DONE, _PUT_DONE) = range(9)
 _EPS = 1e-9
 
 
@@ -96,6 +125,9 @@ class QueryResult:
     arrival_s: float = 0.0       # virtual arrival (t0, or closed-loop start)
     queue_delay_s: float = 0.0   # arrival -> first task start (slot wait)
     backup_slot_s: float = 0.0   # slot-seconds claimed by backup duplicates
+    dup_gets: int = 0            # §5.1 RSM duplicate GETs (in cost.gets)
+    dup_puts: int = 0            # §5.2 WSM duplicate PUTs (in cost.puts)
+    poll_gets: int = 0           # §3.3.1 404 visibility polls (in cost.gets)
 
     @property
     def dollars(self) -> float:
@@ -106,15 +138,52 @@ class QueryResult:
         return self.arrival_s + self.latency_s
 
 
+class _Req:
+    """One scheduled store request of a task's timeline."""
+    __slots__ = ("spec", "put", "end", "done", "issue_t", "polls", "dup",
+                 "target")
+
+    def __init__(self, spec, put: bool):
+        self.spec = spec
+        self.put = put
+        self.end = math.inf      # authoritative completion (min with dup)
+        self.done = False
+        self.issue_t = 0.0
+        self.polls = 0
+        self.dup = False         # a DUP_FIRE issued a duplicate request
+        self.target = None       # key actually read (visibility re-target)
+
+
+class _TaskIO:
+    """Request-level state machine for one task, advanced by heap events."""
+    __slots__ = ("phases", "slow", "pi", "reqs", "queue", "pending",
+                 "phase_end", "conc", "nlanes")
+
+    def __init__(self, phases: list, slow: float, nlanes: int):
+        self.phases = phases
+        self.slow = slow             # per-task worker slowdown factor
+        self.pi = -1                 # current phase index
+        self.reqs: list[_Req] = []   # flattened, request-index addressed
+        self.queue: deque[int] = deque()   # reads waiting for a lane
+        self.pending = 0             # unfinished requests in current phase
+        self.phase_end = 0.0
+        self.conc = 1                # lanes used by the current read batch
+        self.nlanes = nlanes
+
+
 @dataclasses.dataclass
 class _Task:
     start: float = 0.0           # virtual start (slot claimed + overhead)
-    dur: float = 0.0             # original duration; the slot is busy this long
+    dur: float = 0.0             # original timeline duration (slot busy)
     end: float = math.inf        # effective completion (min with backup dup)
     dispatched: bool = False     # submitted to the executor
-    resolved: bool = False       # real execution finished, virtual end known
+    resolved: bool = False       # real bytes moved, timeline known
+    io_done: bool = False        # timeline fully advanced, dur known
     done: bool = False           # TASK_DONE processed
     result: TaskResult | None = None
+    io: _TaskIO | None = None
+    backup_cap: float = math.inf   # completion candidate of a §5 duplicate
+    backup_dup: float | None = None   # dup duration awaiting billing settle
 
 
 class _Stage:
@@ -147,22 +216,39 @@ class _Run:
         self.ends: dict[str, list[float]] = {}
         self.nparts: dict[str, int] = {}
         self.gets = self.puts = self.invocations = self.backups = 0
+        self.dup_gets = self.dup_puts = self.poll_gets = 0
         self.task_seconds = 0.0
         self.final_result = None
         self.stage_windows: dict[str, tuple[float, float]] = {}
         self.finish_t = t0
         self.first_start = math.inf    # earliest task start (sans overhead)
         self.backup_slot_s = 0.0       # slot-seconds held by §5 duplicates
+        # reads parked on a producer task's virtual end, woken by its
+        # TASK_DONE: (producer stage name, task) -> [(sidx, tidx, rq, lane_t)]
+        self.waiters: dict[tuple[str, int], list[tuple]] = {}
 
     def consumers_of(self, name: str) -> list[_Stage]:
         return [s for s in self.stages if name in s.st["deps"]]
+
+
+@dataclasses.dataclass
+class _Ctx:
+    """The event loop's shared mutable state, threaded through handlers."""
+    runs: list
+    events: list
+    slots: list
+    pending: deque
+    outstanding: dict
+    pool: ThreadPoolExecutor
+    deps_map: dict
 
 
 class Coordinator:
     def __init__(self, store: ObjectStore, base_splits: dict[str, list[str]],
                  policy: StragglerConfig | None = None, *, seed: int = 0,
                  max_parallel: int = 1000, compute_scale: float = 1.0,
-                 executor_workers: int | None = None):
+                 executor_workers: int | None = None,
+                 record_events: bool = False):
         self.store = store
         self.base_splits = base_splits
         self.policy = policy or StragglerConfig()
@@ -171,6 +257,8 @@ class Coordinator:
         self.compute_scale = compute_scale
         self.executor_workers = executor_workers or min(8, os.cpu_count()
                                                         or 1)
+        # request-level event log: (t, kind, query, stage, task, req, info)
+        self.event_log: list[tuple] | None = [] if record_events else None
         self._small_cache: dict[str, Table] = {}
         self._cache_lock = threading.Lock()
         self._name_counts: dict[str, int] = {}
@@ -198,6 +286,15 @@ class Coordinator:
         return np.random.default_rng(
             [self.seed, zlib.crc32(run.name.encode()), sidx, tidx, stream])
 
+    def _req_rng(self, run: _Run, sidx: int, tidx: int, rq: int,
+                 attempt: int) -> np.random.Generator:
+        """Per-(request, attempt) RNG — stream 3 of the task key space, so
+        request latencies are a pure function of indices (width-invariant,
+        and independent of the heap's processing order)."""
+        return np.random.default_rng(
+            [self.seed, zlib.crc32(run.name.encode()), sidx, tidx, 3, rq,
+             attempt])
+
     def _slowdown(self, rng: np.random.Generator) -> float:
         f = float(rng.lognormal(0.0, 0.06))
         if rng.random() < COLD_STRAGGLER_PROB:
@@ -216,6 +313,12 @@ class Coordinator:
         if st["kind"] == "scan":
             return st["tasks"] or len(self.base_splits[st["table"]])
         return max(st.get("tasks", 1), 1)
+
+    def _log(self, t: float, name: str, run: _Run, stage: _Stage,
+             tidx: int, rq: int, **info):
+        if self.event_log is not None:
+            self.event_log.append((t, name, run.name, stage.st["name"],
+                                   tidx, rq, info))
 
     # ---------------------------------------------------- plan preparation
     def _expand_plan(self, plan: dict, unique_name: str) -> dict:
@@ -311,7 +414,7 @@ class Coordinator:
         open_loop = [a for a, dep in zip(arrivals, afters) if dep is None]
         slots = [min(open_loop)] * self.max_parallel
         heapq.heapify(slots)
-        events: list[tuple] = []              # (t, kind, ridx, sidx, tidx)
+        events: list[tuple] = []        # (t, kind, ridx, sidx, tidx, rq)
         pending: deque[tuple[int, int, int]] = deque()   # tasks w/o a slot
         outstanding: dict = {}                # future -> (run, stage, tidx)
 
@@ -320,28 +423,39 @@ class Coordinator:
                 self._activate(run, run.t0, events)
 
         with ThreadPoolExecutor(max_workers=self.executor_workers) as pool:
+            ctx = _Ctx(runs, events, slots, pending, outstanding, pool,
+                       deps_map)
             while events or outstanding:
                 while outstanding and not self._can_pop(events, outstanding):
-                    self._await_some(outstanding, events)
+                    self._await_some(ctx)
                 if not events:
                     continue
-                t, kind, ridx, sidx, tidx = heapq.heappop(events)
+                t, kind, ridx, sidx, tidx, rq = heapq.heappop(events)
                 run, stage = runs[ridx], runs[ridx].stages[sidx]
                 if kind == _READY:
                     if not stage.dispatched and \
                             not self._deps_resolved(run, stage):
                         # a late-dispatched producer hasn't executed yet;
                         # wall-clock wait only, virtual state is unchanged
-                        heapq.heappush(events, (t, kind, ridx, sidx, tidx))
-                        self._await_some(outstanding, events)
+                        heapq.heappush(events,
+                                       (t, kind, ridx, sidx, tidx, rq))
+                        self._await_some(ctx)
                         continue
-                    self._on_ready(run, stage, t, slots, pending, pool,
-                                   outstanding)
+                    self._on_ready(ctx, run, stage, t)
                 elif kind == _DONE:
-                    self._on_done(runs, run, stage, tidx, t, events, slots,
-                                  pending, pool, outstanding, deps_map)
-                else:
-                    self._on_backup(run, stage, tidx, t, events, slots)
+                    self._on_done(ctx, run, stage, tidx, t)
+                elif kind == _BACKUP:
+                    self._on_backup(ctx, run, stage, tidx, t)
+                elif kind in (_GET_ISSUE, _VISIBLE):
+                    self._on_get_issue(ctx, run, stage, tidx, rq, t,
+                                       retargeted=(kind == _VISIBLE))
+                elif kind == _PUT_ISSUE:
+                    self._on_put_issue(ctx, run, stage, tidx, rq, t)
+                elif kind == _DUP:
+                    self._on_dup(ctx, run, stage, tidx, rq, t)
+                else:                   # _GET_DONE / _PUT_DONE
+                    self._on_req_done(ctx, run, stage, tidx, rq, t,
+                                      is_put=(kind == _PUT_DONE))
 
         return [self._finish(run) for run in runs]
 
@@ -349,7 +463,7 @@ class Coordinator:
     @staticmethod
     def _can_pop(events, outstanding) -> bool:
         """An event may fire only if no unresolved task could still produce
-        an earlier one (a task's end >= its start)."""
+        an earlier one (all of a task's timeline events are >= its start)."""
         if not events:
             return False
         if not outstanding:
@@ -358,14 +472,14 @@ class Coordinator:
                     for (_r, stage, tidx) in outstanding.values())
         return events[0][0] <= bound + _EPS
 
-    def _await_some(self, outstanding, events):
-        """Block until >=1 real execution finishes; record virtual timings.
+    def _await_some(self, ctx: _Ctx):
+        """Block until >=1 real execution finishes; adopt its timeline.
         Only deterministic state is touched, in deterministic per-task ways,
         so wall-clock completion order never leaks into virtual time."""
-        done, _ = wait(list(outstanding), return_when=FIRST_COMPLETED)
+        done, _ = wait(list(ctx.outstanding), return_when=FIRST_COMPLETED)
         for f in done:
-            run, stage, tidx = outstanding.pop(f)
-            self._resolve(run, stage, tidx, f.result(), events)
+            run, stage, tidx = ctx.outstanding.pop(f)
+            self._resolve(ctx, run, stage, tidx, f.result())
 
     @staticmethod
     def _activate(run: _Run, t0: float, events):
@@ -375,15 +489,16 @@ class Coordinator:
         for stage in run.stages:
             if not stage.st["deps"]:
                 stage.ready_pushed = True
-                heapq.heappush(events, (t0, _READY, run.ridx, stage.sidx, 0))
+                heapq.heappush(events,
+                               (t0, _READY, run.ridx, stage.sidx, 0, -1))
 
     @staticmethod
     def _deps_resolved(run: _Run, stage: _Stage) -> bool:
         return all(tk.resolved for dep in stage.st["deps"]
                    for tk in run.by_name[dep].tasks)
 
-    def _dispatch(self, run: _Run, stage: _Stage, tidx: int, start: float,
-                  pool, outstanding):
+    def _dispatch(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                  start: float):
         task = stage.tasks[tidx]
         task.start = start
         task.dispatched = True
@@ -392,79 +507,79 @@ class Coordinator:
                         self._task_rng(run, stage.sidx, tidx, 0),
                         self.compute_scale)
         call = self._build_task(run, stage.st, tidx, worker, start)
-        outstanding[pool.submit(call)] = (run, stage, tidx)
+        ctx.outstanding[ctx.pool.submit(call)] = (run, stage, tidx)
 
-    def _drain_pending(self, runs, pending, slots, pool, outstanding,
-                       events, now: float):
-        """Give freed slots to queued tasks, FIFO. Called only at TASK_DONE
+    def _drain_pending(self, ctx: _Ctx, now: float):
+        """Give freed slots to queued tasks, FIFO. Called only at event
         pops, so assignment order is a function of virtual time alone."""
-        while pending and slots:
-            ridx, sidx, tidx = pending.popleft()
-            run, stage = runs[ridx], runs[ridx].stages[sidx]
-            t_slot = max(heapq.heappop(slots), stage.ready_t, now)
+        while ctx.pending and ctx.slots:
+            ridx, sidx, tidx = ctx.pending.popleft()
+            run, stage = ctx.runs[ridx], ctx.runs[ridx].stages[sidx]
+            t_slot = max(heapq.heappop(ctx.slots), stage.ready_t, now)
             run.first_start = min(run.first_start, t_slot)
             start = t_slot + INVOKE_OVERHEAD_S
-            self._dispatch(run, stage, tidx, start, pool, outstanding)
+            self._dispatch(ctx, run, stage, tidx, start)
             # the stage's backup timers were armed before this task even
             # started: arm its own straggler timer now (stale-checked at
             # the pop if the task finishes in time)
             if stage.backup_armed and stage.median > 0:
                 detect = start + self.policy.backup_factor * stage.median
-                heapq.heappush(events,
-                               (detect, _BACKUP, ridx, sidx, tidx))
+                heapq.heappush(ctx.events,
+                               (detect, _BACKUP, ridx, sidx, tidx, -1))
 
-    # ------------------------------------------------------- event handlers
-    def _on_ready(self, run: _Run, stage: _Stage, t: float, slots, pending,
-                  pool, outstanding):
+    # ------------------------------------------------------- task events
+    def _on_ready(self, ctx: _Ctx, run: _Run, stage: _Stage, t: float):
         if stage.dispatched:
             return
         stage.dispatched = True
         stage.ready_t = t
         for ti in range(stage.n):
-            if not slots:
-                pending.append((run.ridx, stage.sidx, ti))
+            if not ctx.slots:
+                ctx.pending.append((run.ridx, stage.sidx, ti))
                 continue
-            t_slot = max(heapq.heappop(slots), t)
+            t_slot = max(heapq.heappop(ctx.slots), t)
             run.first_start = min(run.first_start, t_slot)
-            self._dispatch(run, stage, ti, t_slot + INVOKE_OVERHEAD_S,
-                           pool, outstanding)
+            self._dispatch(ctx, run, stage, ti, t_slot + INVOKE_OVERHEAD_S)
 
-    def _resolve(self, run: _Run, stage: _Stage, tidx: int, r: TaskResult,
-                 events):
-        """A real execution finished: fix the task's virtual timing."""
+    def _resolve(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                 r: TaskResult):
+        """A real execution finished: adopt its request timeline. Virtual
+        timing is decided by the event heap from here on."""
         task = stage.tasks[tidx]
-        slow = self._slowdown(self._task_rng(run, stage.sidx, tidx, 1))
-        dur = (r.virtual_end - task.start) * slow
-        task.dur = dur
-        task.end = task.start + dur
         task.resolved = True
         task.result = r
-        name = stage.st["name"]
-        run.keys[name][tidx] = r.key
-        run.ends[name][tidx] = task.end
+        run.keys[stage.st["name"]][tidx] = r.key
         run.invocations += 1
         run.gets += r.gets
         run.puts += r.puts
         if r.result is not None:
             run.final_result = r.result
-        heapq.heappush(events, (task.end, _DONE, run.ridx, stage.sidx,
-                                tidx))
+        slow = self._slowdown(self._task_rng(run, stage.sidx, tidx, 1))
+        task.io = _TaskIO(r.timeline.phases, slow,
+                          max(self.policy.parallel_reads, 1))
+        self._io_advance(ctx, run, stage, tidx, task.start)
 
-    def _on_done(self, runs, run: _Run, stage: _Stage, tidx: int, t: float,
-                 events, slots, pending, pool, outstanding, deps_map=None):
+    def _on_done(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                 t: float):
         task = stage.tasks[tidx]
         if task.done or abs(t - task.end) > _EPS:
-            return                        # stale event (backup rescheduled)
+            return                        # stale event (end superseded)
         task.done = True
         stage.done += 1
-        # float accumulation happens here, in virtual-event order, so the
-        # sum is bit-identical for every executor width
-        run.task_seconds += task.dur
-        # the slot stays busy for the ORIGINAL duration even when a backup
-        # duplicate finished the task's work earlier
-        heapq.heappush(slots, task.start + task.dur)
-        self._drain_pending(runs, pending, slots, pool, outstanding, events,
-                            t)
+        if task.io_done:
+            # the slot stays busy for the ORIGINAL duration even when a
+            # backup duplicate finished the task's work earlier
+            heapq.heappush(ctx.slots, task.start + task.dur)
+            self._drain_pending(ctx, t)
+        # else: a mid-flight backup duplicate won; the slot is released
+        # (and billing settled) when the original's timeline completes
+
+        # wake reads parked on this producer's virtual end: re-placement
+        # at this pop (t == task.end) keeps all pushed events >= now
+        for (csidx, ctidx, rq, lane_t) in run.waiters.pop(
+                (stage.st["name"], tidx), []):
+            self._io_place_get(ctx, run, run.stages[csidx], ctidx, rq,
+                               lane_t)
 
         # arm backup timers once the stage median is estimable (§5)
         pol = self.policy
@@ -472,26 +587,28 @@ class Coordinator:
                 stage.done >= max(math.ceil(pol.backup_quorum * stage.n), 1):
             stage.backup_armed = True
             stage.median = float(np.median(
-                [tk.dur for tk in stage.tasks if tk.done]))
+                [tk.end - tk.start for tk in stage.tasks if tk.done]))
             if stage.median > 0:
                 for ti, tk in enumerate(stage.tasks):
                     detect = tk.start + pol.backup_factor * stage.median
                     if tk.dispatched and not tk.done and \
                             tk.end > detect + _EPS:
-                        heapq.heappush(events, (detect, _BACKUP, run.ridx,
-                                                stage.sidx, ti))
+                        heapq.heappush(ctx.events,
+                                       (detect, _BACKUP, run.ridx,
+                                        stage.sidx, ti, -1))
 
         if stage.done == stage.n:
             self._finish_stage(run, stage)
-            if stage.st is run.plan["stages"][-1] and deps_map:
+            if stage.st is run.plan["stages"][-1] and ctx.deps_map:
                 # closed-loop streams: the next query in the stream arrives
                 # think_s after this one finishes
-                for di, think in deps_map.get(run.ridx, ()):
-                    self._activate(runs[di], run.finish_t + think, events)
-        self._check_consumers(run, stage.st["name"], events, t)
+                for di, think in ctx.deps_map.get(run.ridx, ()):
+                    self._activate(ctx.runs[di], run.finish_t + think,
+                                   ctx.events)
+        self._check_consumers(run, stage.st["name"], ctx.events, t)
 
-    def _on_backup(self, run: _Run, stage: _Stage, tidx: int, t: float,
-                   events, slots):
+    def _on_backup(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                   t: float):
         """BACKUP_FIRE: duplicate a straggling task; completion is the min
         of original and duplicate (first conditional PUT wins).
 
@@ -504,30 +621,242 @@ class Coordinator:
         when the original wins (Lambda invocations cannot be cancelled);
         billing (task_seconds) stops at the losing writer's conditional
         PUT, which is why slot-seconds are tracked separately in
-        ``backup_slot_s``.
+        ``backup_slot_s``. When the duplicate beats an original whose
+        timeline is still advancing, the min is applied (and billing
+        settled) at the original's timeline completion.
         """
         task = stage.tasks[tidx]
         if task.done or task.end <= t + _EPS:
             return
-        if not slots:
+        if not ctx.slots:
             return                          # at the invocation limit
         dup = stage.median * self._slowdown(
             self._task_rng(run, stage.sidx, tidx, 2))
-        start = max(heapq.heappop(slots), t) + INVOKE_OVERHEAD_S
-        heapq.heappush(slots, start + dup)
+        start = max(heapq.heappop(ctx.slots), t) + INVOKE_OVERHEAD_S
+        heapq.heappush(ctx.slots, start + dup)
         run.backups += 1
         run.invocations += 1
         run.gets += task.result.gets        # duplicate re-reads its inputs
         run.puts += task.result.puts
-        run.task_seconds += min(dup, task.dur)
         run.backup_slot_s += dup
-        new_end = min(task.end, start + dup)
-        if new_end < task.end - _EPS:
-            task.end = new_end              # original DONE event goes stale
-            run.ends[stage.st["name"]][tidx] = new_end
-            heapq.heappush(events,
-                           (new_end, _DONE, run.ridx, stage.sidx, tidx))
+        cand = start + dup
+        self._log(t, "BACKUP_FIRE", run, stage, tidx, -1, dup_s=dup,
+                  cand=cand)
+        if task.io_done:
+            run.task_seconds += min(dup, task.dur)
+            if cand < task.end - _EPS:
+                task.end = cand             # original DONE event goes stale
+                run.ends[stage.st["name"]][tidx] = cand
+                heapq.heappush(ctx.events, (cand, _DONE, run.ridx,
+                                            stage.sidx, tidx, -1))
+        else:
+            # the original's duration is not known yet: remember the
+            # duplicate and settle at timeline completion
+            task.backup_dup = dup
+            if cand < task.backup_cap:
+                task.backup_cap = cand
+                task.end = cand
+                run.ends[stage.st["name"]][tidx] = cand
+                heapq.heappush(ctx.events, (cand, _DONE, run.ridx,
+                                            stage.sidx, tidx, -1))
 
+    # ---------------------------------------------------- request events
+    def _io_advance(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                    t: float):
+        """Advance a task's timeline to the next phase that needs heap
+        events (read batch or write), folding compute phases into ``t``."""
+        task = stage.tasks[tidx]
+        io = task.io
+        while True:
+            io.pi += 1
+            if io.pi >= len(io.phases):
+                self._io_complete(ctx, run, stage, tidx, t)
+                return
+            phase = io.phases[io.pi]
+            if phase[0] == "compute":
+                t += phase[1] * io.slow
+                continue
+            if phase[0] == "gets":
+                _, specs, conc = phase
+                io.conc = conc
+                io.pending = len(specs)
+                io.phase_end = t
+                base = len(io.reqs)
+                io.reqs.extend(_Req(s, False) for s in specs)
+                io.queue.extend(range(base, base + len(specs)))
+                for _ in range(min(io.nlanes, len(io.queue))):
+                    self._io_place_get(ctx, run, stage, tidx,
+                                       io.queue.popleft(), t)
+                return
+            # "puts": primary + optional doublewrite twin, in parallel
+            _, specs = phase
+            io.pending = len(specs)
+            io.phase_end = t
+            for s in specs:
+                rq = len(io.reqs)
+                io.reqs.append(_Req(s, True))
+                heapq.heappush(ctx.events, (t, _PUT_ISSUE, run.ridx,
+                                            stage.sidx, tidx, rq))
+            return
+
+    def _io_place_get(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                      rq: int, lane_t: float):
+        """Place one read on its lane: resolve the producer's virtual end
+        (or park on it), pick the doublewrite twin that becomes visible
+        first, bill the 404 polls, and push the issue event."""
+        io = stage.tasks[tidx].io
+        req = io.reqs[rq]
+        spec = req.spec
+        if spec.src is not None:
+            dep = run.by_name[spec.src[0]].tasks[spec.src[1]]
+            if not dep.done:
+                run.waiters.setdefault(spec.src, []).append(
+                    (stage.sidx, tidx, rq, lane_t))
+                return
+            avail = dep.end
+        else:
+            avail = spec.avail
+        target, lag = visible_twin(spec.key, spec.alt_key,
+                                   self.store.config.seed)
+        req.target = target
+        polls, tt = poll_until_visible(lane_t, avail, lag)
+        if polls:
+            req.polls = polls
+            run.gets += polls
+            run.poll_gets += polls
+            self._log(tt, "VISIBLE_AT", run, stage, tidx, rq, target=target,
+                      polls=polls, avail=avail, lag=lag)
+            heapq.heappush(ctx.events, (tt, _VISIBLE, run.ridx, stage.sidx,
+                                        tidx, rq))
+        else:
+            # tt == max(lane_t, avail): issue as soon as the lane and the
+            # producer allow
+            heapq.heappush(ctx.events, (tt, _GET_ISSUE, run.ridx,
+                                        stage.sidx, tidx, rq))
+
+    def _on_get_issue(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                      rq: int, t: float, retargeted: bool = False):
+        io = stage.tasks[tidx].io
+        req = io.reqs[rq]
+        req.issue_t = t
+        rng = self._req_rng(run, stage.sidx, tidx, rq, 0)
+        t1 = self.store.config.get_model.sample(req.spec.nbytes,
+                                                rng) * io.slow
+        req.end = t + t1
+        pol = self.policy.rsm
+        if pol.enabled:
+            timeout = pol.timeout_s(req.spec.nbytes, io.conc)
+            if t1 > timeout:
+                heapq.heappush(ctx.events, (t + timeout, _DUP, run.ridx,
+                                            stage.sidx, tidx, rq))
+        self._log(t, "GET_ISSUE", run, stage, tidx, rq, key=req.target,
+                  nbytes=req.spec.nbytes, conc=io.conc,
+                  retargeted=retargeted)
+        heapq.heappush(ctx.events, (req.end, _GET_DONE, run.ridx,
+                                    stage.sidx, tidx, rq))
+
+    def _on_put_issue(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                      rq: int, t: float):
+        io = stage.tasks[tidx].io
+        req = io.reqs[rq]
+        req.issue_t = t
+        rng = self._req_rng(run, stage.sidx, tidx, rq, 0)
+        send1, post1 = self.store.config.put_model.sample_phases(
+            req.spec.nbytes, rng)
+        send1 *= io.slow
+        post1 *= io.slow
+        t1 = send1 + post1
+        req.end = t + t1
+        pol = self.policy.wsm
+        if pol.enabled:
+            start2 = pol.dup_start_s(send1, req.spec.nbytes)
+            if t1 > start2:
+                heapq.heappush(ctx.events, (t + start2, _DUP, run.ridx,
+                                            stage.sidx, tidx, rq))
+        self._log(t, "PUT_ISSUE", run, stage, tidx, rq, key=req.spec.key,
+                  nbytes=req.spec.nbytes)
+        heapq.heappush(ctx.events, (req.end, _PUT_DONE, run.ridx,
+                                    stage.sidx, tidx, rq))
+
+    def _on_dup(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                rq: int, t: float):
+        """DUP_FIRE: the §5 per-request timer expired — issue a duplicate
+        GET/PUT mid-request; completion is first-of-two-wins and the loser
+        is cancelled but billed (itemized in dup_gets/dup_puts)."""
+        io = stage.tasks[tidx].io
+        req = io.reqs[rq]
+        if req.done or req.end <= t + _EPS:
+            return                          # completed before the timer
+        rng = self._req_rng(run, stage.sidx, tidx, rq, 1)
+        if req.put:
+            send2, post2 = self.store.config.put_model.sample_phases(
+                req.spec.nbytes, rng)
+            t2 = (send2 + post2) * io.slow
+            run.puts += 1
+            run.dup_puts += 1
+        else:
+            t2 = self.store.config.get_model.sample(req.spec.nbytes,
+                                                    rng) * io.slow
+            run.gets += 1
+            run.dup_gets += 1
+        req.dup = True
+        new_end = min(req.end, t + t2)
+        self._log(t, "DUP_FIRE", run, stage, tidx, rq,
+                  kind="put" if req.put else "get", nbytes=req.spec.nbytes,
+                  won=new_end < req.end - _EPS)
+        if new_end < req.end - _EPS:
+            req.end = new_end               # original DONE event goes stale
+            heapq.heappush(ctx.events,
+                           (new_end, _PUT_DONE if req.put else _GET_DONE,
+                            run.ridx, stage.sidx, tidx, rq))
+
+    def _on_req_done(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                     rq: int, t: float, is_put: bool):
+        io = stage.tasks[tidx].io
+        req = io.reqs[rq]
+        if req.done or abs(t - req.end) > _EPS:
+            return                          # superseded by the duplicate
+        req.done = True
+        io.pending -= 1
+        io.phase_end = max(io.phase_end, t)
+        self._log(t, "PUT_DONE" if is_put else "GET_DONE", run, stage,
+                  tidx, rq, nbytes=req.spec.nbytes, dur=t - req.issue_t,
+                  dup=req.dup)
+        if not is_put and io.queue:
+            # the freed lane immediately serves the next queued read
+            self._io_place_get(ctx, run, stage, tidx, io.queue.popleft(), t)
+        if io.pending == 0 and not io.queue:
+            self._io_advance(ctx, run, stage, tidx, io.phase_end)
+
+    def _io_complete(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                     t: float):
+        """The task's timeline is fully advanced: fix its original duration,
+        settle deferred backup billing, and fire (or reconcile) TASK_DONE."""
+        task = stage.tasks[tidx]
+        task.io_done = True
+        task.dur = t - task.start
+        # float accumulation happens at event pops, in virtual-event order,
+        # so the sum is bit-identical for every executor width
+        run.task_seconds += task.dur
+        if task.backup_dup is not None:
+            # §5 duplicate raced a mid-flight original: billing stops at
+            # the losing writer's conditional PUT
+            run.task_seconds += min(task.backup_dup, task.dur)
+            task.backup_dup = None
+        if task.done:
+            # a backup duplicate already finished this task (its DONE
+            # popped at backup_cap); release the slot now that the
+            # original's full duration is known
+            heapq.heappush(ctx.slots, task.start + task.dur)
+            self._drain_pending(ctx, t)
+            return
+        end = min(t, task.backup_cap)
+        task.end = end
+        run.ends[stage.st["name"]][tidx] = end
+        heapq.heappush(ctx.events,
+                       (end, _DONE, run.ridx, stage.sidx, tidx, -1))
+
+    # ------------------------------------------------------- completions
     def _finish_stage(self, run: _Run, stage: _Stage):
         name = stage.st["name"]
         run.stage_windows[name] = (min(tk.start for tk in stage.tasks),
@@ -557,7 +886,7 @@ class Coordinator:
             if ok:
                 cons.ready_pushed = True
                 heapq.heappush(events, (max(ready, now), _READY, run.ridx,
-                                        cons.sidx, 0))
+                                        cons.sidx, 0, -1))
 
     def _finish(self, run: _Run) -> QueryResult:
         cost = QueryCost(run.task_seconds * WORKER_MEM_GB, run.invocations,
@@ -569,7 +898,8 @@ class Coordinator:
             run.invocations - run.backups, run.backups,
             {k: (round(a - run.t0, 3), round(b - run.t0, 3))
              for k, (a, b) in run.stage_windows.items()},
-            run.task_seconds, run.t0, queue_delay, run.backup_slot_s)
+            run.task_seconds, run.t0, queue_delay, run.backup_slot_s,
+            run.dup_gets, run.dup_puts, run.poll_gets)
 
     # ---------------------------------------------------------- task build
     def _build_task(self, run: _Run, st, ti, w: Worker, start):
@@ -596,14 +926,15 @@ class Coordinator:
         if kind == "combine":
             spec = st["assign"][ti]
             src = st["source"]
-            inputs = [PartInput(run.keys[src][fi], run.ends[src][fi],
+            inputs = [PartInput(run.keys[src][fi], 0.0,
                                 run.nparts[src], spec["partitions"][0],
-                                spec["partitions"][1] - 1)
+                                spec["partitions"][1] - 1, src=(src, fi))
                       for fi in range(*spec["files"])]
             return lambda: w.run_combine(query, st, ti, inputs, start)
         if kind == "final_agg":
             dep = st["deps"][0]
-            inputs = list(zip(run.keys[dep], run.ends[dep]))
+            inputs = [(k, 0.0, (dep, fi))
+                      for fi, k in enumerate(run.keys[dep])]
             return lambda: w.run_final(query, st, inputs, start)
         raise ValueError(kind)
 
@@ -620,9 +951,9 @@ class Coordinator:
             for ci, spec in enumerate(cst["assign"]):
                 lo, hi = spec["partitions"]
                 if lo <= ti < hi:
-                    out.append(PartInput(run.keys[comb][ci],
-                                         run.ends[comb][ci],
-                                         hi - lo, ti - lo, ti - lo))
+                    out.append(PartInput(run.keys[comb][ci], 0.0,
+                                         hi - lo, ti - lo, ti - lo,
+                                         src=(comb, ci)))
             return out
-        return [PartInput(k, e, run.nparts[side], ti, ti)
-                for k, e in zip(run.keys[side], run.ends[side])]
+        return [PartInput(k, 0.0, run.nparts[side], ti, ti, src=(side, fi))
+                for fi, k in enumerate(run.keys[side])]

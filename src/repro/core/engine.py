@@ -10,7 +10,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.coordinator import Coordinator, QueryResult
-from repro.core.plan import stage_by_name
 from repro.core.stragglers import StragglerConfig
 from repro.objectstore.store import ObjectStore, StoreConfig
 from repro.relational import ops as OPS
@@ -46,7 +45,8 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
                 policy: StragglerConfig | None = None,
                 max_parallel: int = 1000, target_bytes: int = 1 << 20,
                 compute_scale: float = 1.0,
-                executor_workers: int | None = None):
+                executor_workers: int | None = None,
+                record_events: bool = False):
     """(coordinator, tables) over a fresh simulated store.
 
     ``compute_scale=0`` makes virtual latency independent of measured
@@ -56,6 +56,9 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
     ``data_seed`` (default: ``seed``) drives the generated dataset — pass a
     fixed ``data_seed`` to vary timing randomness over one dataset, e.g.
     sweeping contention without also regenerating the data (Fig 13).
+    ``record_events=True`` keeps the coordinator's request-level event log
+    (GET/PUT issue/done, DUP_FIRE, VISIBLE_AT, BACKUP_FIRE) in
+    ``coord.event_log`` for the straggler benchmarks and tests.
     """
     tables = generate(sf, seed=seed if data_seed is None else data_seed)
     store = ObjectStore(StoreConfig(seed=seed, time_scale=0.0,
@@ -64,7 +67,8 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
     coord = Coordinator(store, splits, policy, seed=seed,
                         max_parallel=max_parallel,
                         compute_scale=compute_scale,
-                        executor_workers=executor_workers)
+                        executor_workers=executor_workers,
+                        record_events=record_events)
     return coord, tables
 
 

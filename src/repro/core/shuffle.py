@@ -17,7 +17,6 @@ S3 prices; benchmarks/shuffle_cost.py reproduces the §4.2 arithmetic.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from repro.objectstore.store import GET_PRICE, PUT_PRICE
 

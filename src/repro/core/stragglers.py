@@ -37,13 +37,18 @@ class RSMPolicy:
         return self.latency_s + nbytes / (self.throughput_Bps
                                           * max(concurrency, 1))
 
+    def timeout_s(self, nbytes: int, concurrency: int = 1) -> float:
+        """Virtual time after issue at which the duplicate GET fires: the
+        coordinator arms a DUP_FIRE heap event at issue + this."""
+        return self.factor * self.expected(nbytes, concurrency)
+
     def completion(self, model: LatencyModel, nbytes: int, concurrency: int,
                    rng: np.random.Generator) -> tuple[float, int]:
         """(completion time, number of GET requests)."""
         t1 = model.sample(nbytes, rng)
         if not self.enabled:
             return t1, 1
-        timeout = self.factor * self.expected(nbytes, concurrency)
+        timeout = self.timeout_s(nbytes, concurrency)
         if t1 <= timeout:
             return t1, 1
         t2 = model.sample(nbytes, rng)
@@ -63,6 +68,17 @@ class WSMPolicy:
     def expected(self, nbytes: int) -> float:
         return self.latency_s + nbytes / self.throughput_Bps
 
+    def dup_start_s(self, send_s: float, nbytes: int) -> float:
+        """Virtual time after issue at which the duplicate PUT fires (§5.2):
+        the min of the overall response-time timer and the post-send timer
+        (armed when the body finished streaming at ``send_s``). This is the
+        coordinator's DUP_FIRE heap-event offset for writes."""
+        start2 = self.factor * self.expected(nbytes)
+        if self.post_send_timer:
+            start2 = min(start2,
+                         send_s + self.post_factor * self.post_latency_s)
+        return start2
+
     def completion(self, model: LatencyModel, nbytes: int,
                    rng: np.random.Generator) -> tuple[float, int]:
         """(completion time, number of PUT requests)."""
@@ -70,11 +86,7 @@ class WSMPolicy:
         t1 = send1 + post1
         if not self.enabled:
             return t1, 1
-        # timer 1: overall response-time model
-        start2 = self.factor * self.expected(nbytes)
-        # timer 2: post-send model — armed when the body finished sending
-        if self.post_send_timer:
-            start2 = min(start2, send1 + self.post_factor * self.post_latency_s)
+        start2 = self.dup_start_s(send1, nbytes)
         if t1 <= start2:
             return t1, 1
         send2, post2 = model.sample_phases(nbytes, rng)

@@ -5,11 +5,17 @@ store (base table splits or §3.2 partitioned intermediates), executes its
 compiled operator pipeline, writes its output object(s), and exits. No
 worker-to-worker communication exists — the store is the only medium.
 
-Timing is virtual (objectstore.client): real bytes move, latencies are
-sampled; compute time is measured per-thread CPU time x ``compute_scale``
-(``time.thread_time``, not wall-clock, so running many workers concurrently
-on the coordinator's thread pool does not inflate virtual compute when the
-GIL or the scheduler makes a thread wait).
+Timing is *not* decided here: the worker moves real bytes eagerly and
+records every store request into a :class:`RequestTimeline`
+(objectstore.client recording mode) that it hands back in its
+``TaskResult``. The coordinator's event heap replays that timeline —
+per-GET/PUT issue/done events, RSM/WSM duplicate timers, visibility-lag
+re-targeting — so straggler mitigation preempts mid-request instead of
+being composed privately inside the task. Compute time is measured
+per-thread CPU time x ``compute_scale`` (``time.thread_time``, not
+wall-clock, so running many workers concurrently on the coordinator's
+thread pool does not inflate virtual compute when the GIL or the scheduler
+makes a thread wait).
 
 A Worker instance is used by exactly one task on one executor thread; its
 store client and RNG are task-private, so workers need no locking — the
@@ -25,7 +31,7 @@ import numpy as np
 from repro.core import format as FMT
 from repro.core.plan import out_key
 from repro.core.stragglers import StragglerConfig
-from repro.objectstore.client import ReadReq, StoreClient
+from repro.objectstore.client import ReadReq, RequestTimeline, StoreClient
 from repro.objectstore.store import ObjectStore
 from repro.relational import ops as OPS
 from repro.relational.table import Table, deserialize_table, serialize_table
@@ -33,22 +39,29 @@ from repro.relational.table import Table, deserialize_table, serialize_table
 
 @dataclasses.dataclass
 class PartInput:
-    """One partitioned-object input: read partitions [first, last]."""
+    """One partitioned-object input: read partitions [first, last].
+
+    ``src = (producer stage name, task index)`` lets the scheduler resolve
+    the object's availability from the producer task's virtual end at read
+    time (the end may not exist yet when this task is dispatched — §4.4
+    pipelining); ``avail`` is the static fallback for base objects.
+    """
     key: str
     avail: float
     n_parts: int
     first: int
     last: int
+    src: tuple[str, int] | None = None
 
 
 @dataclasses.dataclass
 class TaskResult:
     key: str | None              # output object (None for inline results)
-    virtual_end: float
-    gets: int
-    puts: int
+    gets: int                    # base GETs issued (polls/dups are the
+    puts: int                    # scheduler's); puts include the .dw twin
     compute_s: float
     out_bytes: int
+    timeline: RequestTimeline
     result: object = None        # final stage only
 
 
@@ -73,13 +86,14 @@ def _apply_ops(t: Table, ops: list, base_reader) -> Table:
 
 
 class Worker:
-    """Executes one task; all timing is virtual seconds from `now`."""
+    """Executes one task; records its request timeline for the scheduler."""
 
     def __init__(self, store: ObjectStore, policy: StragglerConfig,
                  rng: np.random.Generator, compute_scale: float = 1.0):
         self.store = store
         self.policy = policy
-        self.client = StoreClient(store, policy, rng)
+        self.timeline = RequestTimeline()
+        self.client = StoreClient(store, policy, rng, timeline=self.timeline)
         self.compute_scale = compute_scale
         self.rng = rng
 
@@ -87,9 +101,11 @@ class Worker:
     def _alt(self, key: str):
         return key + ".dw" if self.policy.doublewrite else None
 
-    def _read_whole(self, keys_avail: list[tuple[str, float]], now: float):
-        reqs = [ReadReq(k, available_at=a, alt_key=self._alt(k))
-                for k, a in keys_avail]
+    def _read_whole(self, inputs: list[tuple[str, float,
+                                             tuple[str, int] | None]],
+                    now: float):
+        reqs = [ReadReq(k, available_at=a, alt_key=self._alt(k), src=s)
+                for k, a, s in inputs]
         return self.client.read_many(reqs, now)
 
     def _read_partitions(self, inputs: list[PartInput], now: float,
@@ -99,7 +115,8 @@ class Worker:
         Returns (per-input list of per-partition Tables, virtual end).
         """
         hdr_reqs = [ReadReq(pi.key, 0, FMT.header_size(pi.n_parts),
-                            available_at=pi.avail, alt_key=self._alt(pi.key))
+                            available_at=pi.avail, alt_key=self._alt(pi.key),
+                            src=pi.src)
                     for pi in inputs]
         headers, t1 = self.client.read_many(hdr_reqs, now)
         body_reqs = []
@@ -109,7 +126,7 @@ class Worker:
             lo, hi = FMT.partition_range(ends, data_start, pi.first, pi.last)
             metas.append((ends, data_start))
             body_reqs.append(ReadReq(pi.key, lo, hi, available_at=pi.avail,
-                                     alt_key=self._alt(pi.key)))
+                                     alt_key=self._alt(pi.key), src=pi.src))
         bodies, t2 = self.client.read_many(body_reqs, t1)
         out: list[list[Table]] = []
         for pi, (ends, data_start), body, req in zip(inputs, metas, bodies,
@@ -128,7 +145,7 @@ class Worker:
     def run_scan(self, query: str, st: dict, task_id: int, split_key: str,
                  avail: float, now: float, n_out_parts: int,
                  base_reader) -> TaskResult:
-        datas, t_in = self._read_whole([(split_key, avail)], now)
+        datas, t_in = self._read_whole([(split_key, avail, None)], now)
         c0 = time.thread_time()
         t = deserialize_table(datas[0], st.get("columns"))
         t = _apply_ops(t, st.get("ops", []), base_reader)
@@ -168,12 +185,15 @@ class Worker:
         comp = (time.thread_time() - c0) * self.compute_scale
         payload = FMT.write_partitioned(parts)
         key = out_key(query, st["name"], task_id)
-        t_out = self.client.write(key, payload, t_in + comp)
-        return TaskResult(key, t_out, self.client.gets, self.client.puts,
-                          comp, len(payload))
+        self.timeline.record_compute(comp)
+        self.client.write(key, payload, t_in + comp,
+                          bill_nbytes=st.get("out_bytes_floor"))
+        return TaskResult(key, self.client.gets, self.client.puts,
+                          comp, len(payload), self.timeline)
 
     def run_final(self, query: str, st: dict,
-                  inputs: list[tuple[str, float]], now: float) -> TaskResult:
+                  inputs: list[tuple[str, float, tuple[str, int] | None]],
+                  now: float) -> TaskResult:
         datas, t_in = self._read_whole(inputs, now)
         c0 = time.thread_time()
         parts = [deserialize_table(d) for d in datas if len(d) > 8]
@@ -186,9 +206,11 @@ class Worker:
         comp = (time.thread_time() - c0) * self.compute_scale
         key = out_key(query, st["name"], 0)
         payload = serialize_table(t)
-        t_out = self.client.write(key, payload, t_in + comp)
-        return TaskResult(key, t_out, self.client.gets, self.client.puts,
-                          comp, len(payload), result=t)
+        self.timeline.record_compute(comp)
+        self.client.write(key, payload, t_in + comp,
+                          bill_nbytes=st.get("out_bytes_floor"))
+        return TaskResult(key, self.client.gets, self.client.puts,
+                          comp, len(payload), self.timeline, result=t)
 
     # ------------------------------------------------------------- output
     def _emit(self, query, st, task_id, t: Table, now, comp,
@@ -201,6 +223,8 @@ class Worker:
                 [serialize_table(p) for p in parts])
         else:
             payload = serialize_table(t)
-        t_out = self.client.write(key, payload, now)
-        return TaskResult(key, t_out, self.client.gets, self.client.puts,
-                          comp, len(payload))
+        self.timeline.record_compute(comp)
+        self.client.write(key, payload, now,
+                          bill_nbytes=st.get("out_bytes_floor"))
+        return TaskResult(key, self.client.gets, self.client.puts,
+                          comp, len(payload), self.timeline)

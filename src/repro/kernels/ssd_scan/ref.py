@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.mamba2 import ssd_chunked  # noqa: F401 (re-export)
+# re-exported so kernel users get oracle + chunked reference together
+from repro.models.mamba2 import ssd_chunked  # noqa: F401
 
 
 def ssd_sequential(x, dt, A, Bm, Cm):

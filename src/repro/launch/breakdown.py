@@ -7,7 +7,7 @@ import re
 import sys
 
 from repro.launch.hlo_analysis import (_collective_bytes, _instr_bytes,
-                                       _multipliers, _shape_elems_bytes,
+                                       _multipliers,
                                        COLLECTIVES, _FREE_OPS, parse_hlo)
 
 

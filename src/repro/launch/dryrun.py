@@ -23,22 +23,19 @@ Usage:
 import argparse
 import json
 import pathlib
-import re
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import SHAPES, ShapeConfig, cells, get_config, registry
-from repro.launch.mesh import make_mesh_by_name, mesh_chips
-from repro.launch.steps import make_decode_step, make_prefill_step, \
-    make_train_step, train_state_defs
-from repro.models.model import build_model
-from repro.models.modules import abstract_params, is_spec, param_count
-from repro.parallel.sharding import param_shardings
 from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.mesh import make_mesh_by_name, mesh_chips
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models.model import build_model
+from repro.models.modules import abstract_params, param_count
+from repro.parallel.sharding import param_shardings
 from repro.runtime.optimizer import make_optimizer
 
 ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import argparse
 
-from repro.core.engine import make_engine, oracle, run_query
+from repro.core.engine import make_engine, run_query
 from repro.core.stragglers import StragglerConfig
 from repro.relational.table import DictColumn
 from repro.relational.tpch import QUERIES

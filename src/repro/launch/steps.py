@@ -6,7 +6,6 @@ lowering reuse the same machinery as parameters.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ still computed-and-masked in this baseline; the `block_tri` implementation
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

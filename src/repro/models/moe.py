@@ -64,7 +64,6 @@ def route(cfg, p, h3):
     weights = weights / jnp.maximum(
         jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
     # load-balance aux (Switch): E * mean(frac_tokens_e * mean_prob_e)
-    T = probs.shape[0]
     one_hot = jax.nn.one_hot(experts[:, 0], m.num_experts, dtype=jnp.float32)
     frac = jnp.mean(one_hot, axis=0)
     mean_prob = jnp.mean(probs, axis=0)

@@ -95,6 +95,28 @@ VISIBILITY_LAG_PROB = 0.02
 VISIBILITY_LAG_MEDIAN_S = 0.8
 VISIBILITY_LAG_SIGMA = 0.8
 
+# a reader that arrives before an object is visible re-GETs it on this
+# cadence; every 404 poll is a billed GET (§3.3.1)
+POLL_INTERVAL_S = 0.05
+
+
+def poll_until_visible(lane_t: float, avail: float, lag: float
+                       ) -> tuple[int, float]:
+    """(billed 404 polls, time of the first poll that finds the object).
+
+    Waiting for a *known* producer end is free (the coordinator knows it);
+    only the visibility-lag window costs polls. Both the sampling-mode
+    client and the event scheduler's VISIBLE_AT path use this, so
+    recording-mode billing can never diverge from sampling-mode billing.
+    """
+    t0 = max(lane_t, avail)
+    polls = 0
+    tt = t0
+    while tt < avail + lag - 1e-12:
+        tt += POLL_INTERVAL_S
+        polls += 1
+    return polls, tt
+
 
 def sample_visibility_lag(rng: np.random.Generator) -> float:
     if rng.random() < VISIBILITY_LAG_PROB:
@@ -109,3 +131,18 @@ def object_visibility_lag(key: str, seed: int = 0) -> float:
     rng = np.random.default_rng(zlib.crc32(key.encode()) ^ (seed * 2654435761
                                                             % 2 ** 31))
     return sample_visibility_lag(rng)
+
+
+def visible_twin(key: str, alt_key: str | None, seed: int = 0
+                 ) -> tuple[str, float]:
+    """(target key, lag): which doublewrite twin becomes visible first.
+
+    §3.3.1: readers of a lagging object fall back to the ``.dw`` twin, so
+    the effective lag is the min over the two independently lagging keys.
+    The primary wins ties so single-write objects always read themselves.
+    """
+    lag = object_visibility_lag(key, seed)
+    if alt_key is None:
+        return key, lag
+    alt_lag = object_visibility_lag(alt_key, seed)
+    return (alt_key, alt_lag) if alt_lag < lag else (key, lag)

@@ -15,7 +15,6 @@ Default layout = FSDP over ("pod","data") x TP over "model":
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Mapping, Sequence
 
 import jax

@@ -17,7 +17,6 @@ Layout:
 """
 from __future__ import annotations
 
-import io
 import json
 
 import jax

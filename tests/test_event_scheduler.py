@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.core.engine import make_engine, oracle, run_query
-from repro.core.stragglers import StragglerConfig
 from repro.core.worker import Worker
 from repro.relational.table import DictColumn
 from repro.relational.tpch import QUERIES

@@ -1,7 +1,6 @@
 """Property tests: partitioned object format (§3.2), shuffle cost model
 (§4.2), straggler policies (§5), table serialization."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import format as FMT

@@ -2,7 +2,6 @@
 scan-vs-unrolled must agree once trip counts are applied."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze
@@ -70,7 +69,6 @@ def test_grad_flops():
 
 
 def test_collectives_counted_with_trip_count():
-    import os
     if jax.device_count() < 2:
         pytest.skip("needs >1 device (run under dryrun env)")
 

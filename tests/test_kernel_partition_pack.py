@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.partition_pack import ref
 from repro.kernels.partition_pack.ops import partition_pack, partition_unpack
 
 SHAPES = [(32, 8, 4, 16), (256, 16, 24, 64), (300, 7, 64, 128),

@@ -54,7 +54,6 @@ def test_moe_matches_dense_reference(arch, impl):
                                               capacity_factor=100.0))
     bundle = build_model(cfg)
     params = init_params(bundle.param_defs, jax.random.key(0))
-    key = "layers" if arch.startswith("deepseek") else "blocks"
     if arch.startswith("deepseek"):
         pm = jax.tree.map(lambda a: a[0], params["layers"])["mlp"]
     else:

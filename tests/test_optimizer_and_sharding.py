@@ -57,7 +57,6 @@ def test_adafactor_state_is_factored():
 
 # ----------------------------------------------------------------- sharding
 def test_sharding_fallback_and_priority():
-    import os
     if jax.device_count() < 8:
         pytest.skip("needs forced multi-device env (dryrun only)")
 

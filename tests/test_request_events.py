@@ -1,0 +1,198 @@
+"""Request-level event engine tests (ISSUE 3): mid-request RSM/WSM
+preemption races, VISIBLE_AT re-targeting, the per-task parallel-read lane
+pool, and duplicate/poll billing itemization in QueryResult."""
+import numpy as np
+
+from repro.core.coordinator import Coordinator
+from repro.core.engine import make_engine, oracle, run_query
+from repro.core.stragglers import RSMPolicy, StragglerConfig, WSMPolicy
+from repro.objectstore.latency import object_visibility_lag, visible_twin
+from repro.objectstore.store import ObjectStore, StoreConfig
+from repro.relational.table import Table, serialize_table
+
+SF = 0.002
+TB = 200_000
+
+
+def _micro(n_tasks: int, policy: StragglerConfig, *, width: int = 8,
+           seed: int = 0):
+    """One scan stage of ``n_tasks`` over a single split: n GETs + n PUTs
+    (billed at 50MB so WSM timers bind), all request events recorded."""
+    store = ObjectStore(StoreConfig(seed=seed, time_scale=0.0,
+                                    simulate_visibility_lag=False))
+    store.put("base/micro/p0", serialize_table(
+        Table({"x": np.arange(4000, dtype=np.float64)})))
+    coord = Coordinator(store, {"micro": ["base/micro/p0"]}, policy,
+                        seed=seed, max_parallel=n_tasks, compute_scale=0.0,
+                        executor_workers=width, record_events=True)
+    plan = {"name": "micro", "stages": [
+        {"name": "scan", "kind": "scan", "table": "micro",
+         "tasks": n_tasks, "deps": [], "out_bytes_floor": 50 << 20}]}
+    return coord, coord.run_query(plan)
+
+
+def _ident(e):
+    """(query, stage, task, request) identity of a logged event."""
+    return (e[2], e[3], e[4], e[5])
+
+
+# ------------------------------------------------------ DUP_FIRE preemption
+def test_mid_request_preemption_wins_races_deterministically():
+    """§5 duplicates are scheduler-level DUP_FIRE events: they fire only
+    past the per-request timer, preempt mid-request (completion after the
+    timer, first-of-two-wins), and the whole race is bit-identical across
+    executor widths and reruns."""
+    pol = StragglerConfig(doublewrite=False, parallel_reads=16,
+                          pipelining=False, backup_tasks=False)
+    sigs = []
+    for width in (1, 8, 8):
+        coord, res = _micro(800, pol, width=width, seed=3)
+        log = coord.event_log
+        dups = [e for e in log if e[1] == "DUP_FIRE"]
+        won = [e for e in dups if e[6]["won"]]
+        assert won, "expected at least one duplicate to win its race"
+        assert {e[6]["kind"] for e in dups} >= {"get", "put"}, \
+            "both RSM and WSM duplicates should fire at this size"
+        done = {_ident(e): e for e in log
+                if e[1] in ("GET_DONE", "PUT_DONE")}
+        for e in dups:
+            d = done[_ident(e)]
+            issue = d[0] - d[6]["dur"]
+            if e[6]["kind"] == "get":
+                # RSM fires exactly at issue + timeout, and only for
+                # requests that would have exceeded it
+                timeout = pol.rsm.timeout_s(d[6]["nbytes"], 1)
+                assert abs(issue + timeout - e[0]) < 1e-6
+            # completion is after the duplicate was issued (mid-request
+            # preemption, not post-hoc composition) ...
+            assert d[0] >= e[0] - 1e-9
+            assert d[6]["dup"]
+        for e in won:
+            # ... and a winning duplicate actually shortened the request
+            assert done[_ident(e)][0] > e[0] - 1e-9
+        sigs.append((res.latency_s, res.cost.gets, res.cost.puts,
+                     res.dup_gets, res.dup_puts, res.poll_gets,
+                     tuple(sorted(x[0] for x in log))))
+    assert sigs[0] == sigs[1] == sigs[2], \
+        "preemption races must not depend on executor width or rerun"
+
+
+# -------------------------------------------------- VISIBLE_AT re-targeting
+def test_visible_at_retargets_and_never_reads_early(monkeypatch):
+    """§3.3.1 as events: readers of a lagging object are re-targeted to the
+    .dw twin and issue only once it is visible — polls are billed, results
+    stay correct."""
+    import repro.core.coordinator as C
+
+    lag = 0.4
+    real_twin = C.visible_twin
+
+    def slow_primaries(key, alt_key, seed=0):
+        if key.startswith("q/") and alt_key is not None:
+            return alt_key, lag          # primary lags; twin visible first
+        return real_twin(key, alt_key, seed)
+
+    monkeypatch.setattr(C, "visible_twin", slow_primaries)
+    coord, tables = make_engine(sf=SF, seed=2, target_bytes=TB,
+                                compute_scale=0.0, record_events=True)
+    res = run_query(coord, "q12", {"join": 4})
+    log = coord.event_log
+    vis = [e for e in log if e[1] == "VISIBLE_AT"]
+    assert vis, "expected intermediate reads to wait on visibility"
+    issued = {_ident(e): e for e in log if e[1] == "GET_ISSUE"}
+    for e in vis:
+        iss = issued[_ident(e)]
+        assert e[6]["target"].endswith(".dw"), "re-target to the twin"
+        assert e[6]["polls"] >= 1
+        assert iss[6]["retargeted"] and iss[6]["key"] == e[6]["target"]
+        # the invariant: the GET is issued at the first poll that finds
+        # the object — never before avail + lag
+        assert iss[0] >= e[6]["avail"] + e[6]["lag"] - 1e-9
+    assert res.poll_gets == sum(e[6]["polls"] for e in vis)
+    # twins hold identical bytes: results unchanged
+    got = np.sort(np.asarray(res.result["high_line_count"], np.float64))
+    want = np.sort(np.asarray(oracle("q12", tables)["high_line_count"],
+                              np.float64))
+    np.testing.assert_allclose(got, want)
+
+
+def test_visible_twin_picks_min_lag():
+    """The chosen twin is the argmin of the two per-object lags (primary
+    wins ties), so the effective lag equals the historical min()."""
+    seen_alt = False
+    for i in range(400):
+        key = f"q/t/s/t{i}"
+        target, tlag = visible_twin(key, key + ".dw", seed=1)
+        a = object_visibility_lag(key, 1)
+        b = object_visibility_lag(key + ".dw", 1)
+        assert tlag == min(a, b)
+        assert target == (key if a <= b else key + ".dw")
+        seen_alt |= target.endswith(".dw")
+    assert seen_alt, "no key in the scan preferred its twin (lags ~2%)"
+
+
+# --------------------------------------------------------------- lane pool
+def test_lane_pool_exhaustion_serializes_reads():
+    """parallel_reads is a per-task lane pool owned by the scheduler: one
+    lane serializes a task's reads end-to-end; 16 lanes overlap them and
+    the query gets faster."""
+    def run(lanes):
+        pol = StragglerConfig(rsm=RSMPolicy(enabled=False),
+                              wsm=WSMPolicy(enabled=False),
+                              doublewrite=False, parallel_reads=lanes,
+                              pipelining=False, backup_tasks=False)
+        coord, _ = make_engine(sf=SF, seed=6, target_bytes=100_000,
+                               compute_scale=0.0, policy=pol,
+                               record_events=True)
+        res = run_query(coord, "q1")
+        spans = {}
+        for e in coord.event_log:
+            if e[3] != "final":
+                continue
+            if e[1] == "GET_ISSUE":
+                spans.setdefault(e[5], [None, None])[0] = e[0]
+            elif e[1] == "GET_DONE":
+                spans.setdefault(e[5], [None, None])[1] = e[0]
+        iv = sorted(tuple(v) for v in spans.values())
+        assert len(iv) >= 4 and all(s is not None and t is not None
+                                    for s, t in iv)
+        return res.latency_s, iv
+
+    lat1, iv1 = run(1)
+    lat16, iv16 = run(16)
+    for (_s1, e1), (s2, _e2) in zip(iv1, iv1[1:]):
+        assert s2 >= e1 - 1e-9, "one lane must fully serialize reads"
+    assert any(s2 < e1 - 1e-9
+               for (_s1, e1), (s2, _e2) in zip(iv16, iv16[1:])), \
+        "16 lanes should overlap the final stage's reads"
+    assert lat1 > lat16, (lat1, lat16)
+
+
+# ----------------------------------------------------------------- billing
+def test_duplicate_billing_matches_request_counts():
+    """cost.gets/puts decompose exactly into issued requests + DUP_FIRE
+    duplicates + visibility polls, and the itemized QueryResult fields
+    match the scheduler's own event log."""
+    pol = StragglerConfig(parallel_reads=16, backup_tasks=False)
+    coord, _ = make_engine(sf=SF, seed=9, target_bytes=TB,
+                           compute_scale=0.0, policy=pol,
+                           record_events=True)
+    res = run_query(coord, "q12", {"join": 8})
+    log = coord.event_log
+    n_get = sum(e[1] == "GET_ISSUE" for e in log)
+    n_put = sum(e[1] == "PUT_ISSUE" for e in log)
+    n_dup_get = sum(e[1] == "DUP_FIRE" and e[6]["kind"] == "get"
+                    for e in log)
+    n_dup_put = sum(e[1] == "DUP_FIRE" and e[6]["kind"] == "put"
+                    for e in log)
+    n_polls = sum(e[6]["polls"] for e in log if e[1] == "VISIBLE_AT")
+    assert res.backup_count == 0
+    assert res.dup_gets == n_dup_get
+    assert res.dup_puts == n_dup_put
+    assert res.poll_gets == n_polls
+    assert res.cost.gets == n_get + n_dup_get + n_polls
+    assert res.cost.puts == n_put + n_dup_put
+    # doublewrite: every output object is PUT under two keys
+    dw = sum(e[1] == "PUT_ISSUE" and e[6]["key"].endswith(".dw")
+             for e in log)
+    assert dw * 2 == n_put

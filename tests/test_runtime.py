@@ -1,16 +1,13 @@
 """Elastic runtime: checkpoint/restart determinism, failure recovery,
 first-writer-wins duplicate tasks, data pipeline reproducibility."""
-import jax
 import numpy as np
-import pytest
 
 from repro.configs.smoke import smoke_config
-from repro.core.stragglers import StragglerConfig
 from repro.models.model import build_model
 from repro.objectstore.store import ObjectStore, StoreConfig
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.data import StoredCorpus, SyntheticCorpus
-from repro.runtime.train_loop import ElasticTrainer, JobConfig, TaskFailure
+from repro.runtime.train_loop import ElasticTrainer, JobConfig
 
 
 def _store():

@@ -30,7 +30,7 @@ def test_workers_share_nothing_but_the_store():
     coord, _ = make_engine(sf=0.002, seed=2)
     store = coord.store
     puts_before = store.stats.puts
-    res = run_query(coord, "q12", {"join": 4})
+    run_query(coord, "q12", {"join": 4})
     assert store.stats.puts > puts_before
     # every non-final stage produced objects under q/<query>/<stage>/
     keys = [k for k in store.keys() if k.startswith("q/q12/")]
