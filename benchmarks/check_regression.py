@@ -1,18 +1,27 @@
-"""CI benchmark-regression gate (ISSUE 3): fail the job when the workload
-numbers drift from the committed baseline.
+"""CI benchmark-regression gate (ISSUE 3, extended in ISSUE 4): fail the
+job when gated benchmark numbers drift from the committed baseline.
 
 Usage:
     python -m benchmarks.check_regression BENCH_workload.json \
+        [--suite workload|planner] \
         [--baseline benchmarks/baselines/BENCH_workload.json] \
         [--tolerance 0.15]
 
-The gated keys are the Fig-7 break-even threshold and the p50/p99 workload
-latencies per arrival process — all emitted from ``compute_scale=0``
-engines, so they are bit-stable across hosts and Python versions: any
-drift beyond the tolerance is a real change to the cost/latency model,
-not noise. If the change is intentional, refresh the baseline (the error
-message carries the exact command) and commit it with the PR that moved
-the numbers.
+Two suites, auto-detected from the current file's name when ``--suite``
+is omitted:
+
+  * ``workload`` — the Fig-7 break-even threshold, the p50/p99 workload
+    latencies per arrival process, and the per-request SLA attribution
+    components (queue / visibility / GET / PUT / duplicate savings);
+  * ``planner`` — the cost-based plan tuner's chosen cost/latency: the
+    Q12 frontier's latency-optimal point, the per-query SLA pick, and the
+    workload-level SLA pick.
+
+All gated keys are emitted from ``compute_scale=0`` engines, so they are
+bit-stable across hosts and Python versions: drift beyond the tolerance
+is a real change to the cost/latency model, not noise. If the change is
+intentional, refresh the baseline (the error message carries the exact
+command) and commit it with the PR that moved the numbers.
 """
 from __future__ import annotations
 
@@ -20,31 +29,53 @@ import argparse
 import json
 import sys
 
-BASELINE = "benchmarks/baselines/BENCH_workload.json"
 TOLERANCE = 0.15
 
-# keys that gate the build; everything else in the JSON is informational
-GATED_KEYS = [
-    "fig7_breakeven_threshold_s",
-    "workload_uniform_latency_p50_s",
-    "workload_uniform_latency_p99_s",
-    "workload_poisson_latency_p50_s",
-    "workload_poisson_latency_p99_s",
-    "workload_bursty_latency_p50_s",
-    "workload_bursty_latency_p99_s",
-]
+SUITES = {
+    "workload": {
+        "baseline": "benchmarks/baselines/BENCH_workload.json",
+        "refresh_only": "workload,breakeven",
+        "keys": [
+            "fig7_breakeven_threshold_s",
+            "workload_uniform_latency_p50_s",
+            "workload_uniform_latency_p99_s",
+            "workload_poisson_latency_p50_s",
+            "workload_poisson_latency_p99_s",
+            "workload_bursty_latency_p50_s",
+            "workload_bursty_latency_p99_s",
+            "workload_uniform_attr_queue_s_mean",
+            "workload_uniform_attr_visibility_s_mean",
+            "workload_uniform_attr_get_s_mean",
+            "workload_uniform_attr_put_s_mean",
+            "workload_uniform_attr_dup_saved_s_mean",
+        ],
+    },
+    "planner": {
+        "baseline": "benchmarks/baselines/BENCH_planner.json",
+        "refresh_only": "planner",
+        "keys": [
+            "planner_sim_fraction",
+            "planner_q12_best_latency_s",
+            "planner_q12_sla_latency_s",
+            "planner_q12_sla_cost_usd",
+            "planner_q12_wl_sla_p99_s",
+            "planner_q12_wl_sla_cost_per_query",
+        ],
+    },
+}
 
 REFRESH = ("to refresh: PYTHONPATH=src python -m benchmarks.run --quick "
-           "--only workload,breakeven --json {baseline} "
-           "&& commit the result")
+           "--only {only} --json {baseline} && commit the result")
 
 
 def check(current: dict, baseline: dict, tolerance: float,
-          baseline_path: str) -> list[str]:
+          baseline_path: str, suite: str = "workload") -> list[str]:
     """Returns a list of human-readable failures (empty = gate passes)."""
+    spec = SUITES[suite]
     failures = []
-    refresh = REFRESH.format(baseline=baseline_path)
-    for key in GATED_KEYS:
+    refresh = REFRESH.format(only=spec["refresh_only"],
+                             baseline=baseline_path)
+    for key in spec["keys"]:
         if key not in baseline:
             failures.append(f"{key}: missing from baseline — {refresh}")
             continue
@@ -54,8 +85,16 @@ def check(current: dict, baseline: dict, tolerance: float,
             continue
         base = float(baseline[key]["value"])
         cur = float(current[key]["value"])
-        denom = max(abs(base), 1e-12)
-        drift = abs(cur - base) / denom
+        if abs(base) < 1e-12:
+            # structurally-zero baselines (e.g. the visibility component
+            # with lag simulation off): gate on absolute change, not a
+            # degenerate relative drift
+            if abs(cur) > 1e-9:
+                failures.append(
+                    f"{key}: {cur:.6g} vs zero baseline — if intentional, "
+                    f"{refresh}")
+            continue
+        drift = abs(cur - base) / abs(base)
         if drift > tolerance:
             failures.append(
                 f"{key}: {cur:.6g} vs baseline {base:.6g} "
@@ -66,24 +105,39 @@ def check(current: dict, baseline: dict, tolerance: float,
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="BENCH_workload.json from this run")
-    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("current", help="BENCH_*.json from this run")
+    ap.add_argument("--suite", choices=sorted(SUITES), default=None,
+                    help="gated key set (default: inferred from the "
+                         "current file's keys)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline (default: the suite's)")
     ap.add_argument("--tolerance", type=float, default=TOLERANCE)
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
         current = json.load(f)
-    with open(args.baseline) as f:
+
+    suite = args.suite
+    if suite is None:
+        # infer from the rows themselves — temp filenames carry no signal
+        suite = "planner" if any(k.startswith("planner_") for k in current) \
+            else "workload"
+    baseline_path = args.baseline or SUITES[suite]["baseline"]
+
+    with open(baseline_path) as f:
         baseline = json.load(f)
 
-    failures = check(current, baseline, args.tolerance, args.baseline)
+    failures = check(current, baseline, args.tolerance, baseline_path,
+                     suite)
     if failures:
-        print("benchmark regression gate FAILED:", file=sys.stderr)
+        print(f"benchmark regression gate [{suite}] FAILED:",
+              file=sys.stderr)
         for msg in failures:
             print(f"  - {msg}", file=sys.stderr)
         return 1
-    print(f"benchmark regression gate OK: {len(GATED_KEYS)} keys within "
-          f"{args.tolerance:.0%} of {args.baseline}")
+    print(f"benchmark regression gate [{suite}] OK: "
+          f"{len(SUITES[suite]['keys'])} keys within "
+          f"{args.tolerance:.0%} of {baseline_path}")
     return 0
 
 

@@ -1,0 +1,197 @@
+"""Cost-based plan tuner benchmark (§4.3, Fig 14; ISSUE 4).
+
+One cheap probe run calibrates the analytic model; a model-pruned Pareto
+search (coordinate descent + simulator confirmation of frontier
+candidates only) recovers the Q12 cost–latency frontier using a fraction
+of the simulator evaluations an exhaustive sweep would need; the SLA
+selector then picks the cheapest config meeting a latency target — per
+query on the frontier, and per workload-p99 on the ``WorkloadDriver``.
+
+Acceptance, asserted here and regression-gated via
+``benchmarks/baselines/BENCH_planner.json``:
+  * the frontier dominates or matches every hand-sweep point of
+    ``benchmarks/tunable.py``;
+  * simulator evaluations <= 25% of the exhaustive grid (pruned
+    candidates are counted and emitted);
+  * the whole pipeline is bit-identical across executor widths {1, 8}
+    (probes and confirmations run ``compute_scale=0``).
+"""
+from __future__ import annotations
+
+import functools
+
+from benchmarks.common import emit
+from repro.core.engine import make_engine
+from repro.planner import (PlanConfig, QueryEvaluator, QueryModel,
+                           pareto_search, select, select_for_workload)
+from repro.workload import (TPCH_MIX, WorkloadDriver, retune, sample_mix,
+                            uniform)
+
+SEED = 11                  # matches benchmarks/tunable.py
+LANES = (4, 8, 16, 32)
+SLA_SLACK = 1.25           # per-query target = slack * best frontier latency
+WL_N = 6                   # workload-level SLA validation size
+WL_LIMIT = 8               # shared slot pool for the workload runs
+
+
+def _grid(quick: bool):
+    joins = (1, 2, 4, 8, 16, 32, 48, 64) if quick else \
+        (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+    return [PlanConfig.make({"join": nt}, parallel_reads=pr)
+            for nt in joins for pr in LANES]
+
+
+def hand_sweep(quick: bool):
+    return (2, 8, 32) if quick else (2, 4, 8, 16, 32, 64)
+
+
+@functools.lru_cache(maxsize=None)
+def build_search(sf: float, width: int, quick: bool):
+    """Probe -> calibrate -> model-pruned search, at one executor width.
+
+    Memoized: the pipeline is deterministic by contract, and
+    ``benchmarks/tunable.py`` reuses this exact setup in the same
+    ``benchmarks.run`` process — no reason to pay for the probe and the
+    simulator confirmations twice."""
+    coord, _ = make_engine(sf=sf, seed=SEED, target_bytes=1 << 20,
+                           compute_scale=0.0, executor_workers=width,
+                           record_events=True)
+    model, probe = QueryModel.from_probe(coord, "q12", {"join": 8})
+    ev = QueryEvaluator(coord.store, coord.base_splits, "q12", seed=SEED,
+                        max_parallel=coord.max_parallel,
+                        executor_workers=width)
+    must = tuple(PlanConfig.make({"join": nt}) for nt in hand_sweep(quick))
+    grid = _grid(quick)
+    sr = pareto_search(model, ev, grid, must_confirm=must,
+                       max_confirm=len(grid) // 4)
+    return model, ev, sr, probe
+
+
+def _sig(sr):
+    return tuple((p.config, p.pred_latency_s, p.pred_cost_usd,
+                  p.sim_latency_s, p.sim_cost_usd) for p in sr.frontier)
+
+
+def assert_dominates_hand_sweep(sr, ev, quick: bool):
+    """Fig-14 acceptance, shared by planner.py and tunable.py. The hand
+    configs sit in ``sr.confirmed`` (must_confirm), so "the frontier
+    dominates them" alone is unfalsifiable (a point matches itself) —
+    additionally require a MODEL-driven candidate (hand configs excluded)
+    to cover every hand point, which fails if the calibration/model ever
+    regresses into uselessness. Returns [(nt, lat, cost)] of the sweep."""
+    hand_cfgs = {PlanConfig.make({"join": nt}) for nt in hand_sweep(quick)}
+    model_pts = [p for p in sr.confirmed if p.config not in hand_cfgs]
+    assert model_pts, "search must propose candidates beyond the sweep"
+    pts = []
+    for nt in hand_sweep(quick):
+        lat, cost = ev(PlanConfig.make({"join": nt}))
+        pts.append((nt, lat, cost))
+        assert sr.dominates_or_matches(lat, cost), \
+            f"hand sweep join={nt} ({lat:.3f}s, ${cost:.6f}) beats frontier"
+        assert any(p.sim_latency_s <= lat + 1e-12
+                   and p.sim_cost_usd <= cost + 1e-12
+                   for p in model_pts), \
+            f"no model-driven candidate covers hand sweep join={nt}"
+    return pts
+
+
+def _run_workload(config: PlanConfig, sf: float, n: int):
+    """One deterministic workload run with the q12 class retuned to the
+    candidate's ntasks (shared slot pool, compute_scale=0).
+
+    Only the per-stage task counts are applied: the engine's
+    StragglerConfig (parallel_reads, mitigation) is global, so carrying a
+    candidate's I/O policy over would silently retune EVERY class in the
+    mix, not just q12."""
+    coord, _ = make_engine(sf=sf, seed=3, data_seed=7,
+                           target_bytes=1 << 20, max_parallel=WL_LIMIT,
+                           compute_scale=0.0, executor_workers=8)
+    mix = retune(TPCH_MIX, {"q12": config.ntasks_dict})
+    classes = sample_mix(mix, n, seed=3)
+    return WorkloadDriver(coord).run(classes, uniform(n, 0.25))
+
+
+def main(quick: bool = False):
+    sf = 0.002 if quick else 0.01
+
+    model, ev, sr, probe = build_search(sf, 8, quick)
+    emit("planner_probe_latency_s", probe.latency_s,
+         f"one calibration run, cost=${probe.cost.total:.6f}; "
+         f"defaults={model.calib.from_defaults}")
+    emit("planner_grid_size", sr.grid_size,
+         "exhaustive sweep this many simulator runs")
+    emit("planner_sim_evals", sr.sim_evals,
+         f"{len(sr.pruned)} grid points model-pruned (never simulated)")
+    emit("planner_sim_fraction", sr.sim_fraction,
+         "must be <= 0.25 of the exhaustive sweep")
+    assert sr.sim_fraction <= 0.25, \
+        f"planner simulated {sr.sim_fraction:.0%} of the grid (> 25%)"
+    assert len(sr.pruned) + sr.sim_evals - sr.off_grid == sr.grid_size, \
+        "every grid point is either simulated or logged as model-pruned"
+
+    for i, p in enumerate(sr.frontier):
+        emit(f"planner_q12_frontier{i}_latency_s", p.sim_latency_s,
+             f"ntasks={dict(p.config.ntasks)} "
+             f"lanes={p.config.parallel_reads} "
+             f"cost=${p.sim_cost_usd:.6f} (pred {p.pred_latency_s:.3f}s/"
+             f"${p.pred_cost_usd:.6f})")
+
+    # Fig 14 comparison: the frontier must dominate-or-match the hand
+    # sweep (with model-driven coverage so the check is falsifiable)
+    assert_dominates_hand_sweep(sr, ev, quick)
+    emit("planner_hand_sweep_dominated", 1.0,
+         f"frontier covers all {len(hand_sweep(quick))} hand-sweep points"
+         " (model-driven candidates included)")
+
+    best_lat = min(p.sim_latency_s for p in sr.frontier)
+    emit("planner_q12_best_latency_s", best_lat, "latency-optimal config")
+    target = SLA_SLACK * best_lat
+    choice = select(sr, target)
+    assert choice.feasible, "slackened target must be feasible"
+    assert any(choice.config == p.config for p in sr.frontier), \
+        "SLA pick must be a simulated frontier point"
+    emit("planner_q12_sla_latency_s", choice.latency_s,
+         f"cheapest config meeting {target:.3f}s "
+         f"(ntasks={dict(choice.config.ntasks)}, pred_ok={choice.pred_ok})")
+    emit("planner_q12_sla_cost_usd", choice.cost_usd,
+         "regression-gated (benchmarks/check_regression.py --suite "
+         "planner)")
+
+    # determinism contract: same seed => bit-identical frontier at width 1
+    _, _, sr1, _ = build_search(sf, 1, quick)
+    assert _sig(sr1) == _sig(sr), \
+        "planner frontier differs across executor widths {1, 8}"
+    emit("planner_width_parity_ok", 1.0,
+         "frontier bit-identical for executor widths 1 and 8")
+
+    # workload-level SLA: cheapest config whose latency p99 meets a target
+    # on the WorkloadDriver (shared slot pool); candidates cheapest-first,
+    # deduped by ntasks (only task counts reach the workload runs)
+    cands, seen = [], set()
+    for p in sorted(sr.frontier, key=lambda p: p.sim_cost_usd):
+        if p.config.ntasks not in seen:
+            seen.add(p.config.ntasks)
+            cands.append(PlanConfig.make(p.config.ntasks_dict))
+    # the baseline preset itself closes the ladder, so the feasibility
+    # assert below holds by construction (its p99 IS the target)
+    default_cfg = PlanConfig.make({"join": 8})
+    if default_cfg.ntasks not in seen:
+        cands.append(default_cfg)
+    baseline_wl = _run_workload(PlanConfig.make({"join": 8}), sf, WL_N)
+    wl_target = baseline_wl.summary["latency_s_p99"]
+    wl_choice = select_for_workload(lambda c: _run_workload(c, sf, WL_N),
+                                    cands, wl_target)
+    emit("planner_q12_wl_sla_p99_s", wl_choice.latency_p99_s,
+         f"target={wl_target:.3f}s (default-preset p99), "
+         f"feasible={wl_choice.feasible}, "
+         f"ntasks={dict(wl_choice.config.ntasks)}, "
+         f"{len(wl_choice.evaluated)} workload runs")
+    emit("planner_q12_wl_sla_cost_per_query", wl_choice.cost_per_query,
+         f"$/query of the cheapest SLA-meeting config (regression-gated); "
+         f"default preset: ${baseline_wl.cost_per_query:.6f}")
+    assert wl_choice.feasible, \
+        "the default preset's own p99 must be attainable"
+
+
+if __name__ == "__main__":
+    main()

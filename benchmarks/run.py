@@ -21,9 +21,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (breakeven, concurrency, cost_of_operation,
-                            optimizations, parallel_reads, query_latency,
-                            roofline, scalability, shuffle_cost,
-                            straggler_cdf, stragglers, tunable, workload)
+                            optimizations, parallel_reads, planner,
+                            query_latency, roofline, scalability,
+                            shuffle_cost, straggler_cdf, stragglers,
+                            tunable, workload)
     mods = [("parallel_reads", parallel_reads),
             ("straggler_cdf", straggler_cdf),
             ("stragglers", stragglers),
@@ -35,6 +36,7 @@ def main() -> None:
             ("workload", workload),
             ("breakeven", breakeven),
             ("tunable", tunable),
+            ("planner", planner),
             ("optimizations", optimizations),
             ("roofline", roofline)]
     only = set(args.only.split(",")) if args.only else None

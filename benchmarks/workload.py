@@ -48,6 +48,15 @@ def main(quick: bool = False):
         emit(f"workload_{proc}_qph", s["queries_per_hour"],
              f"cost/query=${s['cost_per_query']:.5f}; backups="
              f"{s['backup_count']} ({s['backup_slot_s']:.2f} slot-s)")
+        if proc == "uniform":
+            # per-request SLA attribution (ISSUE 4 satellite): mean
+            # seconds per component, straight from the scheduler's event
+            # stream — regression-gated so a p99 drift is attributable
+            for comp in ("queue_s", "visibility_s", "get_s", "put_s",
+                         "dup_saved_s"):
+                emit(f"workload_{proc}_attr_{comp}_mean",
+                     s[f"attr_{comp}_mean"],
+                     "latency attribution component (gated)")
 
 
 if __name__ == "__main__":

@@ -128,6 +128,16 @@ class QueryResult:
     dup_gets: int = 0            # §5.1 RSM duplicate GETs (in cost.gets)
     dup_puts: int = 0            # §5.2 WSM duplicate PUTs (in cost.puts)
     poll_gets: int = 0           # §3.3.1 404 visibility polls (in cost.gets)
+    # per-request latency attribution, accumulated at event pops (virtual
+    # order -> bit-identical across executor widths): queue_s (slot wait),
+    # invoke_s, get_s / put_s (issue->effective completion, task-parallel
+    # aggregate seconds), visibility_s (§3.3.1 poll windows), compute_s,
+    # dup_saved_s (request seconds cut by winning §5 duplicates)
+    attribution: dict = dataclasses.field(default_factory=dict)
+    # the run's unique store/event-log namespace: equals ``name`` unless
+    # the coordinator disambiguated a re-run as ``name@N`` — pass this to
+    # ``Coordinator.event_summary(query=...)`` to scope a probe's fits
+    store_name: str = ""
 
     @property
     def dollars(self) -> float:
@@ -223,6 +233,11 @@ class _Run:
         self.finish_t = t0
         self.first_start = math.inf    # earliest task start (sans overhead)
         self.backup_slot_s = 0.0       # slot-seconds held by §5 duplicates
+        # latency attribution components (QueryResult.attribution); floats
+        # are accumulated only at event pops, in virtual-event order
+        self.attr = {"invoke_s": 0.0, "get_s": 0.0, "put_s": 0.0,
+                     "visibility_s": 0.0, "compute_s": 0.0,
+                     "dup_saved_s": 0.0}
         # reads parked on a producer task's virtual end, woken by its
         # TASK_DONE: (producer stage name, task) -> [(sidx, tidx, rq, lane_t)]
         self.waiters: dict[tuple[str, int], list[tuple]] = {}
@@ -302,12 +317,15 @@ class Coordinator:
         return f
 
     def _consumer_tasks(self, plan, st) -> int:
-        """Partition fan-out of a producing stage = consumer's task count."""
+        """Partition fan-out of a producing stage = consumer's task count.
+        0 = no join consumes this stage (readers take the output whole, so
+        the worker must NOT write the partitioned format — even a 1-task
+        join consumer, by contrast, needs it)."""
         for other in plan["stages"]:
             if other.get("kind") in ("join",) and \
                     st["name"] in (other.get("left"), other.get("right")):
                 return self._ntasks(plan, other)
-        return 1
+        return 0
 
     def _ntasks(self, plan, st) -> int:
         if st["kind"] == "scan":
@@ -503,6 +521,7 @@ class Coordinator:
         task.start = start
         task.dispatched = True
         stage.undispatched -= 1
+        run.attr["invoke_s"] += INVOKE_OVERHEAD_S
         worker = Worker(self.store, self.policy,
                         self._task_rng(run, stage.sidx, tidx, 0),
                         self.compute_scale)
@@ -575,9 +594,18 @@ class Coordinator:
         # (and billing settled) when the original's timeline completes
 
         # wake reads parked on this producer's virtual end: re-placement
-        # at this pop (t == task.end) keeps all pushed events >= now
+        # at this pop (t == task.end) keeps all pushed events >= now.
+        # When a §5 backup duplicate shortened this end (mid-flight win:
+        # the original's timeline is still advancing), the parked consumer
+        # reads are speculatively re-placed against the duplicate's earlier
+        # conditional PUT — logged so tests can pin the re-read semantics.
         for (csidx, ctidx, rq, lane_t) in run.waiters.pop(
                 (stage.st["name"], tidx), []):
+            if task.backup_cap < math.inf:
+                self._log(t, "READ_REPLACED", run, run.stages[csidx],
+                          ctidx, rq, producer=stage.st["name"],
+                          producer_task=tidx, end=t,
+                          mid_flight=not task.io_done)
             self._io_place_get(ctx, run, run.stages[csidx], ctidx, rq,
                                lane_t)
 
@@ -634,6 +662,7 @@ class Coordinator:
             self._task_rng(run, stage.sidx, tidx, 2))
         start = max(heapq.heappop(ctx.slots), t) + INVOKE_OVERHEAD_S
         heapq.heappush(ctx.slots, start + dup)
+        run.attr["invoke_s"] += INVOKE_OVERHEAD_S
         run.backups += 1
         run.invocations += 1
         run.gets += task.result.gets        # duplicate re-reads its inputs
@@ -674,7 +703,10 @@ class Coordinator:
                 return
             phase = io.phases[io.pi]
             if phase[0] == "compute":
-                t += phase[1] * io.slow
+                comp = phase[1] * io.slow
+                run.attr["compute_s"] += comp
+                self._log(t, "COMPUTE", run, stage, tidx, -1, seconds=comp)
+                t += comp
                 continue
             if phase[0] == "gets":
                 _, specs, conc = phase
@@ -720,6 +752,7 @@ class Coordinator:
                                    self.store.config.seed)
         req.target = target
         polls, tt = poll_until_visible(lane_t, avail, lag)
+        run.attr["visibility_s"] += tt - max(lane_t, avail)
         if polls:
             req.polls = polls
             run.gets += polls
@@ -740,8 +773,10 @@ class Coordinator:
         req = io.reqs[rq]
         req.issue_t = t
         rng = self._req_rng(run, stage.sidx, tidx, rq, 0)
-        t1 = self.store.config.get_model.sample(req.spec.nbytes,
-                                                rng) * io.slow
+        # io.conc lanes share the invocation's NIC: past the Fig-3
+        # saturation point the streaming term slows to the fair share
+        t1 = self.store.config.get_model.sample(req.spec.nbytes, rng,
+                                                io.conc) * io.slow
         req.end = t + t1
         pol = self.policy.rsm
         if pol.enabled:
@@ -795,8 +830,8 @@ class Coordinator:
             run.puts += 1
             run.dup_puts += 1
         else:
-            t2 = self.store.config.get_model.sample(req.spec.nbytes,
-                                                    rng) * io.slow
+            t2 = self.store.config.get_model.sample(req.spec.nbytes, rng,
+                                                    io.conc) * io.slow
             run.gets += 1
             run.dup_gets += 1
         req.dup = True
@@ -805,6 +840,7 @@ class Coordinator:
                   kind="put" if req.put else "get", nbytes=req.spec.nbytes,
                   won=new_end < req.end - _EPS)
         if new_end < req.end - _EPS:
+            run.attr["dup_saved_s"] += req.end - new_end
             req.end = new_end               # original DONE event goes stale
             heapq.heappush(ctx.events,
                            (new_end, _PUT_DONE if req.put else _GET_DONE,
@@ -819,9 +855,11 @@ class Coordinator:
         req.done = True
         io.pending -= 1
         io.phase_end = max(io.phase_end, t)
+        run.attr["put_s" if is_put else "get_s"] += t - req.issue_t
         self._log(t, "PUT_DONE" if is_put else "GET_DONE", run, stage,
                   tidx, rq, nbytes=req.spec.nbytes, dur=t - req.issue_t,
-                  dup=req.dup)
+                  dup=req.dup,
+                  key=req.spec.key if is_put else req.target)
         if not is_put and io.queue:
             # the freed lane immediately serves the next queued read
             self._io_place_get(ctx, run, stage, tidx, io.queue.popleft(), t)
@@ -899,7 +937,79 @@ class Coordinator:
             {k: (round(a - run.t0, 3), round(b - run.t0, 3))
              for k, (a, b) in run.stage_windows.items()},
             run.task_seconds, run.t0, queue_delay, run.backup_slot_s,
-            run.dup_gets, run.dup_puts, run.poll_gets)
+            run.dup_gets, run.dup_puts, run.poll_gets,
+            {"queue_s": queue_delay, **run.attr}, run.name)
+
+    # ------------------------------------------------- calibration hooks
+    def event_summary(self, query: str | None = None) -> dict:
+        """Aggregate the request-level event log for planner calibration
+        (§4.3): per-request GET/PUT latency samples and per-(query, stage)
+        I/O profiles. ``query`` restricts the aggregation to one run's
+        (namespaced) name, so a probe on a shared coordinator never mixes
+        another query's requests into its fits. Returns empty collections
+        when events were not recorded (``record_events=False``) — the
+        planner then falls back to the analytic latency-model constants.
+
+        Profile keys per (query, stage): ``tasks`` (observed task count),
+        ``gets``/``puts`` (effective completions), ``get_bytes``/
+        ``put_bytes`` (modeled request sizes), ``out_bytes`` (primary PUT
+        payloads, doublewrite twins excluded), ``get_s``/``put_s``
+        (issue->completion seconds), ``compute_s``, ``polls``,
+        ``dup_gets``/``dup_puts``, and ``task_durs`` (per-task first-event
+        -> last-event spans, the straggler-spread input).
+        """
+        gets: list[tuple[int, float]] = []
+        puts: list[tuple[int, float]] = []
+        get_issues = put_issues = dup_gets = dup_puts = polls = 0
+        stages: dict[tuple[str, str], dict] = {}
+        windows: dict[tuple[str, str, int], list[float]] = {}
+        for (t, kind, q, s, tidx, rq, info) in self.event_log or ():
+            if query is not None and q != query:
+                continue
+            st = stages.setdefault((q, s), {
+                "gets": 0, "get_bytes": 0, "get_s": 0.0, "puts": 0,
+                "put_bytes": 0, "put_s": 0.0, "out_bytes": 0,
+                "compute_s": 0.0, "polls": 0, "dup_gets": 0, "dup_puts": 0,
+                "tasks": 0})
+            if tidx >= 0:
+                w = windows.setdefault((q, s, tidx), [t, t])
+                w[0], w[1] = min(w[0], t), max(w[1], t)
+            if kind == "GET_DONE":
+                gets.append((info["nbytes"], info["dur"]))
+                st["gets"] += 1
+                st["get_bytes"] += info["nbytes"]
+                st["get_s"] += info["dur"]
+            elif kind == "PUT_DONE":
+                puts.append((info["nbytes"], info["dur"]))
+                st["puts"] += 1
+                st["put_bytes"] += info["nbytes"]
+                st["put_s"] += info["dur"]
+                if not info["key"].endswith(".dw"):
+                    st["out_bytes"] += info["nbytes"]
+            elif kind == "COMPUTE":
+                st["compute_s"] += info["seconds"]
+            elif kind == "GET_ISSUE":
+                get_issues += 1
+            elif kind == "PUT_ISSUE":
+                put_issues += 1
+            elif kind == "VISIBLE_AT":
+                st["polls"] += info["polls"]
+                polls += info["polls"]
+            elif kind == "DUP_FIRE":
+                if info["kind"] == "get":
+                    st["dup_gets"] += 1
+                    dup_gets += 1
+                else:
+                    st["dup_puts"] += 1
+                    dup_puts += 1
+        for (q, s, tidx), (lo, hi) in windows.items():
+            prof = stages[(q, s)]
+            prof["tasks"] += 1
+            prof.setdefault("task_durs", []).append(hi - lo)
+        return {"get_samples": gets, "put_samples": puts,
+                "get_issues": get_issues, "put_issues": put_issues,
+                "dup_gets": dup_gets, "dup_puts": dup_puts, "polls": polls,
+                "stages": stages}
 
     # ---------------------------------------------------------- task build
     def _build_task(self, run: _Run, st, ti, w: Worker, start):

@@ -72,12 +72,36 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
     return coord, tables
 
 
+def build_plan(name: str, ntasks=None, **plan_kw) -> dict:
+    """One physical plan with per-stage task-count overrides applied —
+    the hook the cost-based planner (repro.planner) uses to turn a chosen
+    ``PlanConfig`` into a runnable plan."""
+    return QUERIES[name](ntasks, **plan_kw)
+
+
 def run_query(coord: Coordinator, name: str, ntasks=None, **plan_kw
               ) -> QueryResult:
     # plan_kw reaches every builder: unsupported options fail loudly at the
     # builder instead of being silently dropped for non-q12 queries
-    plan = QUERIES[name](ntasks, **plan_kw)
-    return coord.run_query(plan)
+    return coord.run_query(build_plan(name, ntasks, **plan_kw))
+
+
+def run_queries(coord: Coordinator, specs, arrival_times=None, after=None
+                ) -> list[QueryResult]:
+    """Multiple queries on ONE shared slot pool, each with its own tuning.
+
+    ``specs`` entries are either a query name or ``(name, ntasks)`` /
+    ``(name, ntasks, plan_kw)`` — so planner-chosen per-stage parallelism
+    flows into a whole workload the same way it flows into ``run_query``.
+    """
+    plans = []
+    for spec in specs:
+        if isinstance(spec, str):
+            spec = (spec,)
+        name, ntasks = spec[0], spec[1] if len(spec) > 1 else None
+        plan_kw = spec[2] if len(spec) > 2 else None
+        plans.append(build_plan(name, ntasks, **(plan_kw or {})))
+    return coord.run_queries(plans, arrival_times, after=after)
 
 
 # ---------------------------------------------------------------------------

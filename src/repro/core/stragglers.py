@@ -44,14 +44,16 @@ class RSMPolicy:
 
     def completion(self, model: LatencyModel, nbytes: int, concurrency: int,
                    rng: np.random.Generator) -> tuple[float, int]:
-        """(completion time, number of GET requests)."""
-        t1 = model.sample(nbytes, rng)
+        """(completion time, number of GET requests). ``concurrency`` both
+        relaxes the §5.1 timeout and (past the NIC saturation point, Fig 3)
+        slows the sampled streaming term via the aggregate read cap."""
+        t1 = model.sample(nbytes, rng, concurrency)
         if not self.enabled:
             return t1, 1
         timeout = self.timeout_s(nbytes, concurrency)
         if t1 <= timeout:
             return t1, 1
-        t2 = model.sample(nbytes, rng)
+        t2 = model.sample(nbytes, rng, concurrency)
         return min(t1, timeout + t2), 2
 
 

@@ -216,7 +216,10 @@ class Worker:
     def _emit(self, query, st, task_id, t: Table, now, comp,
               n_out_parts: int) -> TaskResult:
         key = out_key(query, st["name"], task_id)
-        if st.get("partition") and n_out_parts > 1:
+        # a partitioned producer always writes the §3.2 format — including
+        # the degenerate 1-consumer fan-out (planner ntasks=1 configs), so
+        # consumers can parse the header unconditionally
+        if st.get("partition") and n_out_parts >= 1:
             parts = OPS.op_partition(t, st["partition"]["key"], n_out_parts) \
                 if len(t) else [Table({})] * n_out_parts
             payload = FMT.write_partitioned(

@@ -1,0 +1,50 @@
+"""Cost-based plan tuner: per-stage parallelism on the cost–latency
+Pareto frontier.
+
+Starling ships no optimizer — §4.3 and Fig 14 instead show that per-stage
+task counts *trade* latency against cost (more tasks are faster until S3
+request costs dominate), and leave picking the operating point to the
+operator. This subsystem turns that knob-twiddling into an optimization
+problem, following Kassing et al. (*Resource Allocation in Serverless
+Query Processing*): predict the frontier from a model, search it, and
+confirm only the candidates.
+
+Module map (paper anchors):
+
+  * :mod:`repro.planner.calibrate` — §4.3 / Fig 3: fit per-request
+    GET/PUT latency (base + per-byte + straggler surcharge), §5 duplicate
+    rates, and §3.3.1 poll rates from ``Coordinator.event_summary()`` of
+    one cheap probe run; analytic fallbacks when the log is short.
+  * :mod:`repro.planner.model` — §4.3 / Fig 14: structural request-count
+    + calibrated-latency predictor for any per-stage ``ntasks`` /
+    ``parallel_reads`` / mitigation assignment; dollar cost emitted as
+    ``core.cost.QueryCost`` so it can never drift from the repo's closed
+    forms (§6 pricing).
+  * :mod:`repro.planner.search` — Fig 14: model-pruned Pareto search
+    (coordinate descent over per-stage DoP, simulator confirmation of
+    frontier candidates only) with an auditable pruned-point log.
+  * :mod:`repro.planner.sla` — §6 SLA discussion / ROADMAP: cheapest
+    config whose simulator-confirmed latency (or workload p99) meets a
+    target, with the model's agreement recorded; wires into
+    ``workload.pricing`` for the SLA-constrained break-even frontier.
+
+Determinism contract (as everywhere in this repo): probes and simulator
+confirmations run ``compute_scale=0``, so the same seed produces a
+bit-identical frontier for any executor width.
+"""
+from repro.planner.calibrate import Calibration, RequestFit, calibrate
+from repro.planner.model import PlanConfig, Prediction, QueryModel
+from repro.planner.search import (FrontierPoint, QueryEvaluator,
+                                  SearchResult, coordinate_descent,
+                                  pareto_front, pareto_search)
+from repro.planner.sla import (SLAChoice, WorkloadSLAChoice, select,
+                               select_for_workload, sla_breakeven)
+
+__all__ = [
+    "Calibration", "RequestFit", "calibrate",
+    "PlanConfig", "Prediction", "QueryModel",
+    "FrontierPoint", "QueryEvaluator", "SearchResult",
+    "coordinate_descent", "pareto_front", "pareto_search",
+    "SLAChoice", "WorkloadSLAChoice", "select", "select_for_workload",
+    "sla_breakeven",
+]

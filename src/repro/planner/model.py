@@ -1,0 +1,262 @@
+"""Analytic latency/cost predictor (§4.3, Fig 14) over plan configurations.
+
+:class:`QueryModel` predicts ``latency_s`` and ``cost.total`` for ANY
+per-stage ``ntasks`` / ``parallel_reads`` / mitigation assignment
+(:class:`PlanConfig`) without running the simulator. The request *counts*
+are structural — they mirror the worker's exact read/write pattern (§3.2:
+header + body range-GETs per producer object, one partitioned PUT plus
+the doublewrite twin) — while the request *latencies* come from a probe
+:class:`~repro.planner.calibrate.Calibration`, and the per-stage data
+volumes / compute seconds come from the same probe's
+``Coordinator.event_summary()`` (they are invariant under re-partitioning:
+the same rows flow through the stage regardless of the task count).
+
+The latency model composes, per stage: invocation overhead, read batches
+scheduled in waves over ``parallel_reads`` lanes (NIC aggregate cap past
+the Fig-3 saturation point), compute scaled 1/T, the output PUT
+(``out_bytes_floor`` respected), a straggler order-statistic pad that
+grows ~sqrt(2 ln T) with the task count, and §4.3 slot-queueing waves
+when T exceeds the invocation limit. Stage spans chain along plan
+dependencies (pipelining overlap is deliberately ignored — the model
+ranks candidates; the simulator confirms frontier points).
+
+Dollar cost is emitted as a ``core.cost.QueryCost`` with *expected*
+(fractional) request counts, so the model can never disagree with the
+repo's closed-form pricing: ``Prediction.cost.total`` IS the closed form
+evaluated at the predicted counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.cost import WORKER_MEM_GB, QueryCost
+from repro.core.format import header_size
+from repro.core.stragglers import StragglerConfig
+from repro.planner.calibrate import Calibration, calibrate
+from repro.relational.tpch import QUERIES
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """One point of the planner's search space: per-stage degree of
+    parallelism (the plan builder's ``ntasks`` keys) + the per-task read
+    lane count + the §5/§3.3.1 mitigation assignment. Frozen and hashable
+    so search results dedup and cache by config."""
+    ntasks: tuple[tuple[str, int], ...] = ()
+    parallel_reads: int = 16
+    rsm: bool = True
+    wsm: bool = True
+    backup_tasks: bool = True
+    doublewrite: bool = True
+
+    @staticmethod
+    def make(ntasks: dict | None = None, **kw) -> "PlanConfig":
+        return PlanConfig(tuple(sorted((ntasks or {}).items())), **kw)
+
+    @property
+    def ntasks_dict(self) -> dict:
+        return dict(self.ntasks)
+
+    def replace(self, **kw) -> "PlanConfig":
+        if "ntasks" in kw and isinstance(kw["ntasks"], dict):
+            kw["ntasks"] = tuple(sorted(kw["ntasks"].items()))
+        return dataclasses.replace(self, **kw)
+
+    def policy(self, base: StragglerConfig) -> StragglerConfig:
+        """The coordinator StragglerConfig realising this assignment."""
+        return dataclasses.replace(
+            base, parallel_reads=self.parallel_reads,
+            rsm=dataclasses.replace(base.rsm, enabled=self.rsm),
+            wsm=dataclasses.replace(base.wsm, enabled=self.wsm),
+            backup_tasks=self.backup_tasks, doublewrite=self.doublewrite)
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    latency_s: float
+    cost: QueryCost          # expected counts -> closed-form dollars
+    stages: tuple            # (name, tasks, span_s) per stage
+
+    @property
+    def cost_usd(self) -> float:
+        return self.cost.total
+
+
+class QueryModel:
+    """Predicts (latency, cost) for one query's plan configurations."""
+
+    def __init__(self, query, calibration: Calibration, profiles: dict,
+                 split_bytes: dict, *, max_parallel: int = 1000,
+                 plan_kw: dict | None = None, latency_bias: float = 1.0):
+        # ``query`` is a name in relational.tpch.QUERIES or any plan
+        # builder callable (ntasks, **plan_kw) -> plan dict
+        self.builder = QUERIES[query] if isinstance(query, str) else query
+        self.query = query if isinstance(query, str) else \
+            getattr(query, "__name__", "custom")
+        self.calib = calibration
+        self.profiles = profiles          # stage name -> probe profile
+        self.split_bytes = split_bytes    # table -> [split sizes]
+        self.max_parallel = max(max_parallel, 1)
+        self.plan_kw = dict(plan_kw or {})
+        # probe-anchored multiplicative correction: the analytic model is
+        # built to RANK configs; anchoring it to the one measured run puts
+        # predicted latencies on the simulator's absolute scale too
+        self.latency_bias = latency_bias
+
+    # ------------------------------------------------------------- probe
+    @classmethod
+    def from_probe(cls, coord, query, ntasks: dict | None = None, *,
+                   plan_kw: dict | None = None):
+        """Run one cheap probe of ``query`` on ``coord`` (which must record
+        events), calibrate from its event log, and return
+        ``(model, probe_result)``. §4.3: one measured run prices the whole
+        configuration space."""
+        builder = QUERIES[query] if isinstance(query, str) else query
+        plan = builder(ntasks, **(plan_kw or {}))
+        res = coord.run_query(plan)
+        # the coordinator namespaces re-runs of the same plan name
+        # (QueryResult.store_name); both the fits and the profiles
+        # aggregate THIS run's rows only
+        summary = coord.event_summary(query=res.store_name)
+        profiles = {s: prof for (_q, s), prof in summary["stages"].items()}
+        if coord.event_log is not None and not profiles:
+            raise ValueError(
+                f"probe run {res.store_name!r} left no rows in the event "
+                "log — cannot profile stages")
+        calib = calibrate(summary, probe_rsm=coord.policy.rsm.enabled,
+                          probe_wsm=coord.policy.wsm.enabled)
+        split_bytes = {t: [coord.store.size(k) for k in ks]
+                       for t, ks in coord.base_splits.items()}
+        model = cls(query, calib, profiles, split_bytes,
+                    max_parallel=coord.max_parallel, plan_kw=plan_kw)
+        probe_cfg = PlanConfig.make(
+            ntasks, parallel_reads=coord.policy.parallel_reads,
+            rsm=coord.policy.rsm.enabled, wsm=coord.policy.wsm.enabled,
+            backup_tasks=coord.policy.backup_tasks,
+            doublewrite=coord.policy.doublewrite)
+        try:
+            raw = model.predict(probe_cfg).latency_s
+            model.latency_bias = min(max(res.latency_s / raw, 0.2), 5.0) \
+                if raw > 0 else 1.0
+        except ValueError:
+            pass          # un-modeled plan shape (multi-stage shuffle)
+        return model, res
+
+    # ----------------------------------------------------------- helpers
+    def _resolved_tasks(self, plan: dict) -> dict:
+        out = {}
+        for st in plan["stages"]:
+            if st["kind"] == "scan":
+                out[st["name"]] = st["tasks"] or \
+                    len(self.split_bytes[st["table"]])
+            else:
+                out[st["name"]] = max(st.get("tasks", 1), 1)
+        return out
+
+    def _batch_s(self, n_req: int, nbytes: float, lanes: int,
+                 tail_s: float) -> float:
+        """One barriered read batch: n requests over `lanes` lanes, served
+        in waves; active lanes share the NIC aggregate read cap (the
+        per-request composition is the calibration's ``expected_s``)."""
+        if n_req <= 0:
+            return 0.0
+        conc = min(n_req, max(lanes, 1))
+        per = self.calib.get.expected_s(nbytes, conc, tail_s=tail_s)
+        return math.ceil(n_req / max(lanes, 1)) * per
+
+    @staticmethod
+    def _broadcast_gets(st: dict, split_bytes: dict) -> int:
+        return sum(len(split_bytes[op["table"]])
+                   for op in st.get("ops", [])
+                   if op["op"] == "broadcast_join")
+
+    def _sigma_rel(self, prof: dict) -> float:
+        durs = prof.get("task_durs", [])
+        if len(durs) < 2:
+            return 0.0
+        mean = sum(durs) / len(durs)
+        if mean <= 0:
+            return 0.0
+        var = sum((d - mean) ** 2 for d in durs) / len(durs)
+        return min(math.sqrt(var) / mean, 1.0)
+
+    # ----------------------------------------------------------- predict
+    def predict(self, config: PlanConfig) -> Prediction:
+        """Latency + expected cost of ``config``; pure function of the
+        calibration, the probe profiles, and the plan structure."""
+        plan = self.builder(config.ntasks_dict or None, **self.plan_kw)
+        ntasks = self._resolved_tasks(plan)
+        calib = self.calib
+        lanes = max(config.parallel_reads, 1)
+        get_tail = calib.get_tail_s(config.rsm)
+        put_tail = calib.put_tail_s(config.wsm)
+        dup_get = calib.dup_get_rate if config.rsm else 0.0
+        dup_put = calib.dup_put_rate if config.wsm else 0.0
+        n_put_keys = 2 if config.doublewrite else 1
+
+        finish: dict[str, float] = {}
+        spans = []
+        gets = puts = 0.0
+        invocations = 0
+        task_seconds = 0.0
+        for st in plan["stages"]:
+            name, kind = st["name"], st["kind"]
+            T = ntasks[name]
+            prof = self.profiles.get(name, {})
+            out_total = prof.get("out_bytes", 0)
+            io_s = 0.0
+            n_reads = 0          # store reads per task (timeline-visible)
+            if kind == "scan":
+                sizes = self.split_bytes[st["table"]]
+                io_s = self._batch_s(1, sum(sizes) / len(sizes), lanes,
+                                     get_tail)
+                n_reads = 1
+            elif kind == "join":
+                s_l, s_r = ntasks[st["left"]], ntasks[st["right"]]
+                n_src = s_l + s_r
+                body_total = (self.profiles.get(st["left"], {})
+                              .get("out_bytes", 0)
+                              + self.profiles.get(st["right"], {})
+                              .get("out_bytes", 0))
+                io_s = self._batch_s(n_src, header_size(T), lanes, get_tail)
+                io_s += self._batch_s(n_src, body_total / (T * n_src),
+                                      lanes, get_tail)
+                n_reads = 2 * n_src
+            elif kind == "final_agg":
+                dep = st["deps"][0]
+                s_d = ntasks[dep]
+                dep_bytes = self.profiles.get(dep, {}).get("out_bytes", 0)
+                io_s = self._batch_s(s_d, dep_bytes / s_d, lanes, get_tail)
+                n_reads = s_d
+            else:
+                raise ValueError(
+                    f"stage kind {kind!r} (multi-stage shuffle combiners) "
+                    "is not analytically modeled — confirm such configs "
+                    "with the simulator evaluator instead")
+            compute_s = prof.get("compute_s", 0.0) / T
+            out_per_task = out_total / T
+            floor = st.get("out_bytes_floor") or 0
+            billed_out = max(out_per_task, floor)
+            put_s = calib.put.expected_s(billed_out, tail_s=put_tail)
+            span_io = io_s + compute_s + put_s
+            # straggler order statistic: the stage ends at its slowest task
+            pad = self._sigma_rel(prof) * span_io \
+                * math.sqrt(2.0 * math.log(T)) if T >= 2 else 0.0
+            slot_waves = math.ceil(T / self.max_parallel)
+            span = calib.invoke_overhead_s + slot_waves * (span_io + pad)
+            ready = max((finish[d] for d in st["deps"]), default=0.0)
+            finish[name] = ready + span
+            spans.append((name, T, span))
+
+            issued_gets = T * n_reads
+            gets += issued_gets * (1.0 + dup_get + calib.polls_per_get) \
+                + T * self._broadcast_gets(st, self.split_bytes)
+            puts += T * n_put_keys * (1.0 + dup_put)
+            invocations += T
+            task_seconds += T * span_io
+
+        cost = QueryCost(task_seconds * WORKER_MEM_GB, invocations,
+                         gets, puts)
+        return Prediction(max(finish.values()) * self.latency_bias, cost,
+                          tuple(spans))

@@ -23,12 +23,12 @@ from repro.workload.arrivals import (ClosedLoop, bursty, closed_loop,
                                      poisson, uniform)
 from repro.workload.driver import (QueryRecord, WorkloadDriver,
                                    WorkloadResult)
-from repro.workload.mix import TPCH_MIX, QueryClass, sample_mix
+from repro.workload.mix import TPCH_MIX, QueryClass, retune, sample_mix
 from repro.workload.pricing import Frontier, frontier, solve_break_even
 
 __all__ = [
     "ClosedLoop", "bursty", "closed_loop", "poisson", "uniform",
     "QueryRecord", "WorkloadDriver", "WorkloadResult",
-    "TPCH_MIX", "QueryClass", "sample_mix",
+    "TPCH_MIX", "QueryClass", "retune", "sample_mix",
     "Frontier", "frontier", "solve_break_even",
 ]

@@ -37,6 +37,9 @@ class QueryRecord:
     task_count: int
     backup_count: int
     backup_slot_s: float        # slot-seconds claimed by §5 duplicates
+    # per-request latency attribution straight from the scheduler's event
+    # stream (queue/invoke/get/put/visibility/compute/dup_saved seconds)
+    attribution: dict = dataclasses.field(default_factory=dict)
 
     @property
     def finish_s(self) -> float:
@@ -84,6 +87,13 @@ def summarize(records: list[QueryRecord], makespan_s: float) -> dict:
             out[f"{name}_mean"] = float(xs.mean())
             for q in (50, 90, 99):
                 out[f"{name}_p{q}"] = float(np.percentile(xs, q))
+    # SLA attribution (§3.3.1/§5): mean per-query seconds per component,
+    # so a p99 regression can be blamed on queueing vs visibility vs
+    # GET/PUT time vs lost duplicate savings (gated in check_regression)
+    comps = sorted({k for r in records for k in r.attribution})
+    for comp in comps:
+        xs = [r.attribution.get(comp, 0.0) for r in records]
+        out[f"attr_{comp}_mean"] = float(np.mean(xs))
     return out
 
 
@@ -122,4 +132,5 @@ class WorkloadDriver:
     def _record(i: int, res: QueryResult) -> QueryRecord:
         return QueryRecord(i, res.name, res.arrival_s, res.queue_delay_s,
                            res.latency_s, res.cost, res.task_count,
-                           res.backup_count, res.backup_slot_s)
+                           res.backup_count, res.backup_slot_s,
+                           dict(res.attribution))

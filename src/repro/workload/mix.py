@@ -49,6 +49,26 @@ TPCH_MIX = (
 )
 
 
+def retune(mix, overrides: dict[str, dict]) -> tuple[QueryClass, ...]:
+    """Apply planner-chosen per-stage ``ntasks`` overrides to a mix.
+
+    ``overrides`` maps query name -> ntasks dict (e.g. the ``ntasks_dict``
+    of a ``repro.planner.PlanConfig``); classes of other queries pass
+    through untouched. Unknown query names raise (a typo'd override must
+    not silently tune nothing).
+    """
+    known = {c.query for c in mix}
+    unknown = set(overrides) - known
+    if unknown:
+        raise ValueError(f"overrides for queries not in mix: "
+                         f"{sorted(unknown)}")
+    return tuple(
+        dataclasses.replace(c, ntasks={**(c.ntasks or {}),
+                                       **overrides[c.query]})
+        if c.query in overrides else c
+        for c in mix)
+
+
 def sample_mix(mix, n: int, *, seed: int = 0) -> list[QueryClass]:
     """Draw n classes i.i.d. proportionally to their weights (seeded)."""
     classes = list(mix)

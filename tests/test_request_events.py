@@ -196,3 +196,68 @@ def test_duplicate_billing_matches_request_counts():
     dw = sum(e[1] == "PUT_ISSUE" and e[6]["key"].endswith(".dw")
              for e in log)
     assert dw * 2 == n_put
+
+
+# ------------------------------------------- speculative consumer re-reads
+def _replant_run(width: int, seed: int = 4):
+    """Producer stage with heavy unmitigated PUT tails + an aggressive
+    task-level backup policy, and a pipelined consumer that parks reads on
+    straggling producers — the forced mid-flight duplicate-win scenario."""
+    pol = StragglerConfig(rsm=RSMPolicy(enabled=False),
+                          wsm=WSMPolicy(enabled=False),
+                          doublewrite=False, parallel_reads=16,
+                          pipelining=True, pipeline_fraction=0.25,
+                          backup_tasks=True, backup_factor=1.5,
+                          backup_quorum=0.25)
+    store = ObjectStore(StoreConfig(seed=seed, time_scale=0.0,
+                                    simulate_visibility_lag=False))
+    store.put("base/micro/p0", serialize_table(
+        Table({"x": np.arange(4000, dtype=np.float64)})))
+    coord = Coordinator(store, {"micro": ["base/micro/p0"]}, pol,
+                        seed=seed, max_parallel=4000, compute_scale=0.0,
+                        executor_workers=width, record_events=True)
+    aggs = [["n", "count", None]]
+    plan = {"name": "replant", "stages": [
+        {"name": "scan", "kind": "scan", "table": "micro",
+         "tasks": 48, "deps": [], "out_bytes_floor": 50 << 20,
+         "ops": [{"op": "partial_agg", "keys": [], "aggs": aggs}]},
+        {"name": "final", "kind": "final_agg", "tasks": 1, "keys": [],
+         "aggs": aggs, "deps": ["scan"]}]}
+    return coord, coord.run_query(plan)
+
+
+def test_backup_dup_win_replaces_parked_consumer_read():
+    """ROADMAP satellite: when a §5 backup duplicate shortens a producer's
+    virtual end while the original's timeline is still advancing
+    (mid-flight win), a consumer read parked on that producer must be
+    re-placed in the heap at the SHORTENED end — never the original one —
+    and the whole race must be width-invariant."""
+    coord, res = _replant_run(8)
+    log = coord.event_log
+    replaced = [e for e in log if e[1] == "READ_REPLACED"]
+    mid = [e for e in replaced if e[6]["mid_flight"]]
+    assert mid, "expected a mid-flight duplicate win with a parked reader"
+    issued = {_ident(e): e for e in log
+              if e[1] in ("GET_ISSUE", "VISIBLE_AT")}
+    for e in mid:
+        # the re-placed read issues at/after the duplicate's end...
+        iss = issued[_ident(e)]
+        assert iss[0] >= e[6]["end"] - 1e-9
+        # ...which genuinely preempts the original: the loser's timeline
+        # is still emitting request completions after the shortened end
+        prod, ptask = e[6]["producer"], e[6]["producer_task"]
+        later = [d for d in log
+                 if d[1] in ("GET_DONE", "PUT_DONE")
+                 and (d[2], d[3], d[4]) == (e[2], prod, ptask)
+                 and d[0] > e[6]["end"] + 1e-9]
+        assert later, "mid_flight implies the original is still running"
+    assert res.backup_count > 0
+    assert int(res.result["n"][0]) == 4000 * 48      # results unharmed
+
+    # bit-identical across executor widths (the re-placement happens at
+    # event pops, never at wall-clock resolution)
+    coord1, res1 = _replant_run(1)
+    sig = lambda r, lg: (r.latency_s, r.cost.gets, r.cost.puts,  # noqa
+                         r.backup_count, r.attribution,
+                         tuple(sorted(x[0] for x in lg)))
+    assert sig(res1, coord1.event_log) == sig(res, log)
