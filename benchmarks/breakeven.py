@@ -20,14 +20,14 @@ from repro.workload import (TPCH_MIX, WorkloadDriver, frontier, retune,
 def measured_workload(sf: float, n: int, seed: int = 0,
                       q12_config: PlanConfig | None = None):
     # compute_scale=0 keeps the measured $/query bit-stable across hosts
-    # and Python versions (CI regression gate input). Only the candidate's
-    # ntasks reach the run — the engine StragglerConfig is global, so a
+    # and Python versions (CI regression gate input). The candidate's task
+    # counts AND plan options (a multi-stage shuffle pick included) reach
+    # the run via retune; the engine StragglerConfig stays global, since a
     # per-candidate I/O policy would retune every class, not just q12.
     coord, _ = make_engine(sf=sf, seed=seed, data_seed=7,
                            target_bytes=1 << 20, compute_scale=0.0,
                            executor_workers=8)
-    mix = retune(TPCH_MIX, {"q12": q12_config.ntasks_dict}) \
-        if q12_config else TPCH_MIX
+    mix = retune(TPCH_MIX, {"q12": q12_config}) if q12_config else TPCH_MIX
     classes = sample_mix(mix, n, seed=seed)
     return WorkloadDriver(coord).run(classes, uniform(n, 30.0))
 

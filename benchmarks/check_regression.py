@@ -14,8 +14,14 @@ is omitted:
     latencies per arrival process, and the per-request SLA attribution
     components (queue / visibility / GET / PUT / duplicate savings);
   * ``planner`` — the cost-based plan tuner's chosen cost/latency: the
-    Q12 frontier's latency-optimal point, the per-query SLA pick, and the
-    workload-level SLA pick.
+    Q12 frontier's latency-optimal point, the per-query SLA pick, the
+    workload-level SLA pick, and the §4.2 multishuffle crossover (the
+    multi-stage config that dominates the best single-stage one on the
+    join-heavy plan).
+
+The full benchmark catalog — which script emits which keys, what paper
+figure each reproduces, and how to refresh a baseline — is
+``docs/BENCHMARKS.md``.
 
 All gated keys are emitted from ``compute_scale=0`` engines, so they are
 bit-stable across hosts and Python versions: drift beyond the tolerance
@@ -60,12 +66,17 @@ SUITES = {
             "planner_q12_sla_cost_usd",
             "planner_q12_wl_sla_p99_s",
             "planner_q12_wl_sla_cost_per_query",
+            "planner_multishuffle_single_latency_s",
+            "planner_multishuffle_latency_s",
+            "planner_multishuffle_cost_usd",
+            "planner_multishuffle_dominates",
         ],
     },
 }
 
 REFRESH = ("to refresh: PYTHONPATH=src python -m benchmarks.run --quick "
-           "--only {only} --json {baseline} && commit the result")
+           "--only {only} --json {baseline} && commit the result "
+           "(key catalog: docs/BENCHMARKS.md)")
 
 
 def check(current: dict, baseline: dict, tolerance: float,

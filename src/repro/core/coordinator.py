@@ -82,7 +82,6 @@ times.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 import heapq
 import math
@@ -94,9 +93,9 @@ from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 
 import numpy as np
 
-from repro.core import shuffle as SH
 from repro.core.cost import WORKER_MEM_GB, QueryCost
-from repro.core.plan import stage_by_name, validate_plan
+from repro.core.plan import (combine_name, expand_combiners, stage_by_name,
+                             validate_plan)
 from repro.core.stragglers import StragglerConfig
 from repro.core.worker import PartInput, TaskResult, Worker
 from repro.objectstore.latency import poll_until_visible, visible_twin
@@ -341,31 +340,11 @@ class Coordinator:
     # ---------------------------------------------------- plan preparation
     def _expand_plan(self, plan: dict, unique_name: str) -> dict:
         """Working copy with combiner stages spliced in for every multi-stage
-        shuffle join (which gains them as deps). The caller's plan object is
-        never touched, so re-running the same plan dict is safe."""
-        stages = copy.deepcopy(plan["stages"])
-        expanded = {"name": unique_name, "stages": stages}
-        out = []
-        for st in stages:
-            if st["kind"] == "join" and \
-                    st.get("shuffle", {}).get("strategy") == "multi":
-                r = self._ntasks(expanded, st)
-                for side_name in ("left", "right"):
-                    src = st[side_name]
-                    s = self._ntasks(expanded, stage_by_name(expanded, src))
-                    sh = st["shuffle"]
-                    a, b = SH.clamped_splits(s, r, sh.get("p", 1 / 4),
-                                             sh.get("f", 1 / 4))
-                    assign = SH.combiner_assignment(
-                        SH.multi_stage(s, r, 1.0 / a, 1.0 / b))
-                    cname = f"{st['name']}__combine_{side_name}"
-                    out.append({"name": cname, "kind": "combine",
-                                "source": src, "tasks": len(assign),
-                                "assign": assign, "deps": [src]})
-                    st["deps"] = list(st["deps"]) + [cname]
-            out.append(st)
-        expanded["stages"] = out
-        return expanded
+        shuffle join (shared with the planner's structural model, so the two
+        can never disagree on the (p, f) work assignment)."""
+        return expand_combiners(
+            plan, unique_name,
+            {t: len(ks) for t, ks in self.base_splits.items()})
 
     # ------------------------------------------------------------ run API
     def run_query(self, plan: dict, t0: float = 0.0) -> QueryResult:
@@ -1029,8 +1008,8 @@ class Coordinator:
         if kind == "join":
             n_out = self._consumer_tasks(plan, st)
             run.nparts[st["name"]] = n_out
-            left = self._side_inputs(run, st, st["left"], ti)
-            right = self._side_inputs(run, st, st["right"], ti)
+            left = self._side_inputs(run, st, "left", ti)
+            right = self._side_inputs(run, st, "right", ti)
             return lambda: w.run_join(query, st, ti, left, right, start,
                                       n_out, base_reader)
         if kind == "combine":
@@ -1049,12 +1028,19 @@ class Coordinator:
         raise ValueError(kind)
 
     def _side_inputs(self, run: _Run, st, side: str, ti) -> list[PartInput]:
-        """Which objects + partition ranges feed join task ti from `side`.
+        """Which objects + partition ranges feed join task ti from the
+        ``side`` role ("left" | "right").
 
         Single-stage: every producer object, partition ti (2sr reads total).
-        Multi-stage: only the combiners covering partition ti (r/f reads).
+        Multi-stage: only the combiners covering partition ti (the 1/f
+        file-splits of the one partition-run holding ti — 2r/f reads
+        total). Regression note: this used to look the combiner stage up
+        under the producer's *stage name* instead of its side role, so
+        joins silently re-read the producers and multi-stage shuffles
+        never saved a request.
         """
-        comb = f"{st['name']}__combine_{side}"
+        comb = combine_name(st["name"], side)
+        src = st[side]
         if comb in run.keys:                   # combined side
             cst = stage_by_name(run.plan, comb)
             out = []
@@ -1065,5 +1051,5 @@ class Coordinator:
                                          hi - lo, ti - lo, ti - lo,
                                          src=(comb, ci)))
             return out
-        return [PartInput(k, 0.0, run.nparts[side], ti, ti, src=(side, fi))
-                for fi, k in enumerate(run.keys[side])]
+        return [PartInput(k, 0.0, run.nparts[src], ti, ti, src=(src, fi))
+                for fi, k in enumerate(run.keys[src])]

@@ -18,7 +18,10 @@ Task naming: q/<query>/<stage>/t<i>; doublewrite twin appends ".dw".
 """
 from __future__ import annotations
 
+import copy
 import json
+
+from repro.core import shuffle as SH
 
 
 def load_plan(text: str) -> dict:
@@ -50,3 +53,59 @@ def stage_by_name(plan: dict, name: str) -> dict:
 
 def out_key(query: str, stage: str, task: int) -> str:
     return f"q/{query}/{stage}/t{task}"
+
+
+def combine_name(join_stage: str, side: str) -> str:
+    """Name of the spliced-in combiner stage feeding ``side`` of a join."""
+    return f"{join_stage}__combine_{side}"
+
+
+def resolved_tasks(plan: dict, split_counts: dict[str, int]) -> dict:
+    """Stage name -> realized task count (``tasks=0`` scans get one task
+    per base split, exactly like the coordinator)."""
+    out = {}
+    for st in plan["stages"]:
+        if st["kind"] == "scan":
+            out[st["name"]] = st["tasks"] or split_counts[st["table"]]
+        else:
+            out[st["name"]] = max(st.get("tasks", 1), 1)
+    return out
+
+
+def expand_combiners(plan: dict, unique_name: str,
+                     split_counts: dict[str, int]) -> dict:
+    """Working copy with combiner stages spliced in for every multi-stage
+    shuffle join (§4.2), which gains them as deps. The caller's plan object
+    is never touched, so re-running the same plan dict is safe.
+
+    This is the SINGLE source of the multi-stage structure: the coordinator
+    schedules the expanded stages and the planner's :class:`QueryModel`
+    derives its structural request counts from the very same expansion
+    (``splits``/``source_parts``/``assign`` annotations below), so model
+    and simulator can never disagree on the (p, f) work assignment.
+    """
+    stages = copy.deepcopy(plan["stages"])
+    expanded = {"name": unique_name, "stages": stages}
+    counts = resolved_tasks(expanded, split_counts)
+    out = []
+    for st in stages:
+        if st["kind"] == "join" and \
+                st.get("shuffle", {}).get("strategy") == "multi":
+            r = counts[st["name"]]
+            for side_name in ("left", "right"):
+                src = st[side_name]
+                s = counts[src]
+                sh = st["shuffle"]
+                a, b = SH.clamped_splits(s, r, sh.get("p", 1 / 4),
+                                         sh.get("f", 1 / 4))
+                assign = SH.combiner_assignment(
+                    SH.multi_stage(s, r, 1.0 / a, 1.0 / b))
+                cname = combine_name(st["name"], side_name)
+                out.append({"name": cname, "kind": "combine",
+                            "source": src, "tasks": len(assign),
+                            "assign": assign, "splits": (a, b),
+                            "source_parts": r, "deps": [src]})
+                st["deps"] = list(st["deps"]) + [cname]
+        out.append(st)
+    expanded["stages"] = out
+    return expanded

@@ -17,34 +17,43 @@ Module map (paper anchors):
     one cheap probe run; analytic fallbacks when the log is short.
   * :mod:`repro.planner.model` — §4.3 / Fig 14: structural request-count
     + calibrated-latency predictor for any per-stage ``ntasks`` /
-    ``parallel_reads`` / mitigation assignment; dollar cost emitted as
-    ``core.cost.QueryCost`` so it can never drift from the repo's closed
-    forms (§6 pricing).
+    ``parallel_reads`` / §4.2 shuffle strategy with its (p, f) split /
+    mitigation assignment; dollar cost emitted as ``core.cost.QueryCost``
+    so it can never drift from the repo's closed forms (§6 pricing).
+    Multi-stage combiner stages are counted from the same plan expansion
+    the coordinator schedules (``core.plan.expand_combiners``).
   * :mod:`repro.planner.search` — Fig 14: model-pruned Pareto search
-    (coordinate descent over per-stage DoP, simulator confirmation of
-    frontier candidates only) with an auditable pruned-point log.
+    (coordinate descent over per-stage DoP, lanes, shuffle p/f splits and
+    mitigation toggles; simulator confirmation of frontier candidates
+    only) with an auditable pruned-point log.
   * :mod:`repro.planner.sla` — §6 SLA discussion / ROADMAP: cheapest
     config whose simulator-confirmed latency (or workload p99) meets a
     target, with the model's agreement recorded; wires into
-    ``workload.pricing`` for the SLA-constrained break-even frontier.
+    ``workload.pricing`` for the SLA-constrained break-even frontier and
+    emits ``choice_spec`` run specs so picks (multi-stage shuffles
+    included) flow into single queries and, via ``workload.mix.retune``,
+    whole mixes.
 
 Determinism contract (as everywhere in this repo): probes and simulator
 confirmations run ``compute_scale=0``, so the same seed produces a
-bit-identical frontier for any executor width.
+bit-identical frontier for any executor width. See
+``docs/ARCHITECTURE.md`` for the calibrate -> model -> search -> sla
+pipeline in detail.
 """
 from repro.planner.calibrate import Calibration, RequestFit, calibrate
 from repro.planner.model import PlanConfig, Prediction, QueryModel
-from repro.planner.search import (FrontierPoint, QueryEvaluator,
-                                  SearchResult, coordinate_descent,
-                                  pareto_front, pareto_search)
-from repro.planner.sla import (SLAChoice, WorkloadSLAChoice, select,
-                               select_for_workload, sla_breakeven)
+from repro.planner.search import (SCALAR_AXES, FrontierPoint,
+                                  QueryEvaluator, SearchResult,
+                                  coordinate_descent, pareto_front,
+                                  pareto_search)
+from repro.planner.sla import (SLAChoice, WorkloadSLAChoice, choice_spec,
+                               select, select_for_workload, sla_breakeven)
 
 __all__ = [
     "Calibration", "RequestFit", "calibrate",
     "PlanConfig", "Prediction", "QueryModel",
-    "FrontierPoint", "QueryEvaluator", "SearchResult",
+    "FrontierPoint", "QueryEvaluator", "SCALAR_AXES", "SearchResult",
     "coordinate_descent", "pareto_front", "pareto_search",
-    "SLAChoice", "WorkloadSLAChoice", "select", "select_for_workload",
-    "sla_breakeven",
+    "SLAChoice", "WorkloadSLAChoice", "choice_spec", "select",
+    "select_for_workload", "sla_breakeven",
 ]

@@ -1,15 +1,29 @@
 """Analytic latency/cost predictor (§4.3, Fig 14) over plan configurations.
 
 :class:`QueryModel` predicts ``latency_s`` and ``cost.total`` for ANY
-per-stage ``ntasks`` / ``parallel_reads`` / mitigation assignment
-(:class:`PlanConfig`) without running the simulator. The request *counts*
-are structural — they mirror the worker's exact read/write pattern (§3.2:
-header + body range-GETs per producer object, one partitioned PUT plus
-the doublewrite twin) — while the request *latencies* come from a probe
-:class:`~repro.planner.calibrate.Calibration`, and the per-stage data
-volumes / compute seconds come from the same probe's
-``Coordinator.event_summary()`` (they are invariant under re-partitioning:
-the same rows flow through the stage regardless of the task count).
+per-stage ``ntasks`` / ``parallel_reads`` / shuffle-strategy / mitigation
+assignment (:class:`PlanConfig`) without running the simulator.
+
+Inputs: one plan builder (a name in ``relational.tpch.QUERIES`` or any
+callable ``(ntasks, **plan_kw) -> plan dict``), a probe
+:class:`~repro.planner.calibrate.Calibration` (per-request latencies),
+and the probe's per-stage byte/compute profiles from
+``Coordinator.event_summary()``. Output: a :class:`Prediction` —
+``latency_s``, a ``core.cost.QueryCost``, and per-stage spans.
+
+The request *counts* are structural — they mirror the worker's exact
+read/write pattern (§3.2: header + body range-GETs per producer object,
+one partitioned PUT plus the doublewrite twin) — while the per-stage data
+volumes / compute seconds come from the probe (they are invariant under
+re-partitioning: the same rows flow through the stage regardless of the
+task count). Multi-stage shuffles (§4.2) are modeled from the SAME plan
+expansion the coordinator schedules (``core.plan.expand_combiners``):
+with (p, f) clamped to (a, b) = (partition-splits, file-splits), each
+side's combiner stage runs ``a*b`` tasks that issue ``2*a*s`` GETs
+(header + body per covered file) and one combined partitioned PUT each,
+and every join task then reads ``b`` combined objects per side instead of
+``s`` producer objects — the paper's request-wall escape. See
+``docs/ARCHITECTURE.md`` for the full derivation.
 
 The latency model composes, per stage: invocation overhead, read batches
 scheduled in waves over ``parallel_reads`` lanes (NIC aggregate cap past
@@ -24,6 +38,11 @@ Dollar cost is emitted as a ``core.cost.QueryCost`` with *expected*
 (fractional) request counts, so the model can never disagree with the
 repo's closed-form pricing: ``Prediction.cost.total`` IS the closed form
 evaluated at the predicted counts.
+
+Determinism guarantee: ``predict`` is a pure function of the calibration,
+the probe profiles, and the plan structure — no RNG, no wall clock — so
+the same probe always yields bit-identical predictions at any executor
+width.
 """
 from __future__ import annotations
 
@@ -32,35 +51,85 @@ import math
 
 from repro.core.cost import WORKER_MEM_GB, QueryCost
 from repro.core.format import header_size
+from repro.core.plan import (combine_name, expand_combiners,
+                             resolved_tasks, stage_by_name)
 from repro.core.stragglers import StragglerConfig
 from repro.planner.calibrate import Calibration, calibrate
 from repro.relational.tpch import QUERIES
+
+
+def _norm_shuffle(sh) -> tuple | None:
+    """Canonical hashable shuffle spec: ``None`` (keep the builder's
+    default), ``("single",)``, or ``("multi", a, b)`` with integer
+    partition-/file-splits a = round(1/p), b = round(1/f)."""
+    if sh is None:
+        return None
+    if isinstance(sh, str):
+        sh = {"strategy": sh}
+    if isinstance(sh, dict):
+        if sh.get("strategy", "single") != "multi":
+            return ("single",)
+        # defaults mirror core.plan.expand_combiners (p = f = 1/4)
+        a = max(1, int(round(1.0 / sh.get("p", 1 / 4))))
+        b = max(1, int(round(1.0 / sh.get("f", 1 / 4))))
+        return ("multi", a, b)
+    t = tuple(sh)
+    if t[0] == "single":
+        return ("single",)
+    return ("multi", int(t[1]), int(t[2]))
 
 
 @dataclasses.dataclass(frozen=True)
 class PlanConfig:
     """One point of the planner's search space: per-stage degree of
     parallelism (the plan builder's ``ntasks`` keys) + the per-task read
-    lane count + the §5/§3.3.1 mitigation assignment. Frozen and hashable
-    so search results dedup and cache by config."""
+    lane count + the §4.2 shuffle strategy with its (p, f) split + the
+    §5/§3.3.1 mitigation assignment. Frozen and hashable so search results
+    dedup and cache by config."""
     ntasks: tuple[tuple[str, int], ...] = ()
     parallel_reads: int = 16
     rsm: bool = True
     wsm: bool = True
     backup_tasks: bool = True
     doublewrite: bool = True
+    # None = builder default; ("single",) | ("multi", a, b) with a = 1/p
+    # partition-splits and b = 1/f file-splits (see _norm_shuffle)
+    shuffle: tuple | None = None
 
     @staticmethod
     def make(ntasks: dict | None = None, **kw) -> "PlanConfig":
+        if "shuffle" in kw:
+            kw["shuffle"] = _norm_shuffle(kw["shuffle"])
         return PlanConfig(tuple(sorted((ntasks or {}).items())), **kw)
 
     @property
     def ntasks_dict(self) -> dict:
         return dict(self.ntasks)
 
+    @property
+    def shuffle_dict(self) -> dict | None:
+        """The plan-builder ``shuffle=`` kwarg realising this config."""
+        if self.shuffle is None:
+            return None
+        if self.shuffle[0] == "single":
+            return {"strategy": "single"}
+        _, a, b = self.shuffle
+        return {"strategy": "multi", "p": 1.0 / a, "f": 1.0 / b}
+
+    def plan_kwargs(self, base: dict | None = None) -> dict:
+        """``base`` plan_kw with this config's shuffle override merged in
+        — what :class:`QueryModel` and ``QueryEvaluator`` hand the plan
+        builder (builders without a ``shuffle`` option fail loudly)."""
+        kw = dict(base or {})
+        if self.shuffle is not None:
+            kw["shuffle"] = self.shuffle_dict
+        return kw
+
     def replace(self, **kw) -> "PlanConfig":
         if "ntasks" in kw and isinstance(kw["ntasks"], dict):
             kw["ntasks"] = tuple(sorted(kw["ntasks"].items()))
+        if "shuffle" in kw:
+            kw["shuffle"] = _norm_shuffle(kw["shuffle"])
         return dataclasses.replace(self, **kw)
 
     def policy(self, base: StragglerConfig) -> StragglerConfig:
@@ -144,15 +213,9 @@ class QueryModel:
         return model, res
 
     # ----------------------------------------------------------- helpers
-    def _resolved_tasks(self, plan: dict) -> dict:
-        out = {}
-        for st in plan["stages"]:
-            if st["kind"] == "scan":
-                out[st["name"]] = st["tasks"] or \
-                    len(self.split_bytes[st["table"]])
-            else:
-                out[st["name"]] = max(st.get("tasks", 1), 1)
-        return out
+    @property
+    def _split_counts(self) -> dict:
+        return {t: len(b) for t, b in self.split_bytes.items()}
 
     def _batch_s(self, n_req: int, nbytes: float, lanes: int,
                  tail_s: float) -> float:
@@ -185,8 +248,15 @@ class QueryModel:
     def predict(self, config: PlanConfig) -> Prediction:
         """Latency + expected cost of ``config``; pure function of the
         calibration, the probe profiles, and the plan structure."""
-        plan = self.builder(config.ntasks_dict or None, **self.plan_kw)
-        ntasks = self._resolved_tasks(plan)
+        plan = self.builder(config.ntasks_dict or None,
+                            **config.plan_kwargs(self.plan_kw))
+        # splice in §4.2 combiner stages exactly as the coordinator will
+        # schedule them — the structural counts below read the very same
+        # (p, f) work assignment the simulator executes, and task counts
+        # resolve through the same shared core.plan helpers
+        plan = expand_combiners(plan, plan.get("name", self.query),
+                                self._split_counts)
+        ntasks = resolved_tasks(plan, self._split_counts)
         calib = self.calib
         lanes = max(config.parallel_reads, 1)
         get_tail = calib.get_tail_s(config.rsm)
@@ -212,17 +282,61 @@ class QueryModel:
                 io_s = self._batch_s(1, sum(sizes) / len(sizes), lanes,
                                      get_tail)
                 n_reads = 1
-            elif kind == "join":
-                s_l, s_r = ntasks[st["left"]], ntasks[st["right"]]
-                n_src = s_l + s_r
-                body_total = (self.profiles.get(st["left"], {})
-                              .get("out_bytes", 0)
-                              + self.profiles.get(st["right"], {})
-                              .get("out_bytes", 0))
-                io_s = self._batch_s(n_src, header_size(T), lanes, get_tail)
-                io_s += self._batch_s(n_src, body_total / (T * n_src),
+            elif kind == "combine":
+                # §4.2 combiner: T = a*b tasks; the stage as a whole reads
+                # every producer file a times (one header + one body range
+                # per covered file => 2*a*s GETs), moving ALL the source's
+                # bytes exactly once; each task writes one combined
+                # partitioned object. Counts come from the expansion's own
+                # work assignment, so remainders are exact.
+                src = st["source"]
+                src_bytes = self.profiles.get(src, {}).get("out_bytes", 0)
+                file_reads = sum(sp["files"][1] - sp["files"][0]
+                                 for sp in st["assign"])
+                per_task = file_reads / T          # ~s/b files per combiner
+                io_s = self._batch_s(per_task,
+                                     header_size(st["source_parts"]),
+                                     lanes, get_tail)
+                io_s += self._batch_s(per_task,
+                                      src_bytes / max(file_reads, 1),
                                       lanes, get_tail)
-                n_reads = 2 * n_src
+                n_reads = 2.0 * per_task
+                if not out_total:
+                    # probes normally run single-stage, so there is no
+                    # combiner profile — structurally, every source byte
+                    # passes through the combiners
+                    out_total = src_bytes
+            elif kind == "join":
+                combined = [side for side in ("left", "right")
+                            if combine_name(st["name"], side) in ntasks]
+                if not combined:      # single-stage: read every producer
+                    s_l, s_r = ntasks[st["left"]], ntasks[st["right"]]
+                    n_src = s_l + s_r
+                    body_total = (self.profiles.get(st["left"], {})
+                                  .get("out_bytes", 0)
+                                  + self.profiles.get(st["right"], {})
+                                  .get("out_bytes", 0))
+                    io_s = self._batch_s(n_src, header_size(T), lanes,
+                                         get_tail)
+                    io_s += self._batch_s(n_src, body_total / (T * n_src),
+                                          lanes, get_tail)
+                    n_reads = 2 * n_src
+                else:                 # §4.2: read b combined objects/side
+                    n_reads = 0.0
+                    for side in ("left", "right"):
+                        cst = stage_by_name(plan,
+                                            combine_name(st["name"], side))
+                        a, b = cst["splits"]
+                        side_bytes = self.profiles.get(st[side], {}) \
+                            .get("out_bytes", 0)
+                        # a combined object holds one partition run of
+                        # ceil(T/a) partitions; its header scales with that
+                        io_s += self._batch_s(b,
+                                              header_size(math.ceil(T / a)),
+                                              lanes, get_tail)
+                        io_s += self._batch_s(b, side_bytes / (T * b),
+                                              lanes, get_tail)
+                        n_reads += 2 * b
             elif kind == "final_agg":
                 dep = st["deps"][0]
                 s_d = ntasks[dep]
@@ -231,9 +345,12 @@ class QueryModel:
                 n_reads = s_d
             else:
                 raise ValueError(
-                    f"stage kind {kind!r} (multi-stage shuffle combiners) "
-                    "is not analytically modeled — confirm such configs "
-                    "with the simulator evaluator instead")
+                    f"stage kind {kind!r} is not analytically modeled — "
+                    "confirm such configs with the simulator evaluator "
+                    "(planner.QueryEvaluator) instead; the modeled plan "
+                    "shapes (scan / join / combine / final_agg) are "
+                    "documented in docs/ARCHITECTURE.md, 'The planner "
+                    "pipeline'")
             compute_s = prof.get("compute_s", 0.0) / T
             out_per_task = out_total / T
             floor = st.get("out_bytes_floor") or 0

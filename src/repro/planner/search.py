@@ -6,8 +6,10 @@ and searched). :func:`pareto_search` therefore:
 
   1. prices the whole grid with the analytic :class:`QueryModel`
      (microseconds per point),
-  2. runs coordinate descent over the per-stage DoP axes for a ladder of
-     cost-vs-latency scalarization weights, tracing the model's frontier,
+  2. runs coordinate descent over the per-stage DoP axes, the lane count,
+     the §4.2 shuffle strategy with its (p, f) split, and the mitigation
+     toggles — for a ladder of cost-vs-latency scalarization weights,
+     tracing the model's frontier,
   3. confirms ONLY the resulting candidate set in the simulator
      (``must_confirm`` forces extra points, e.g. a hand sweep to compare
      against), and
@@ -15,9 +17,14 @@ and searched). :func:`pareto_search` therefore:
      model-pruned grid point, so "we skipped 75% of the sweep" is
      auditable rather than asserted.
 
+Inputs: a calibrated :class:`QueryModel`, an ``evaluate(config)``
+callable (normally :class:`QueryEvaluator`), and a grid of
+:class:`PlanConfig` points. Output: a :class:`SearchResult` whose
+``frontier`` is latency-sorted and simulator-confirmed.
+
 Determinism contract: the grid order, the descent, and the evaluator are
 all pure functions of the seed and the config — the frontier is
-bit-identical across executor widths.
+bit-identical across executor widths (see docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
@@ -27,6 +34,11 @@ import math
 from repro.core.coordinator import Coordinator
 from repro.planner.model import PlanConfig, QueryModel
 from repro.relational.tpch import QUERIES
+
+# PlanConfig fields searchable as whole-config axes (everything except the
+# per-stage ntasks keys, which address into the ntasks mapping instead)
+SCALAR_AXES = ("parallel_reads", "shuffle", "rsm", "wsm", "backup_tasks",
+               "doublewrite")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,7 +100,8 @@ def coordinate_descent(model: QueryModel, start: PlanConfig,
                        max_rounds: int = 8,
                        cache: dict | None = None) -> PlanConfig:
     """Minimize ``cost + weight * latency`` by per-coordinate line search
-    over ``axes`` (a stage's ntasks key, or ``"parallel_reads"``). Purely
+    over ``axes`` (a stage's ntasks key, or any :data:`SCALAR_AXES` field
+    — lanes, shuffle strategy/split, mitigation toggles). Purely
     model-driven — never touches the simulator. ``cache`` memoizes
     predictions across descents (every visited config is an axis
     cross-product member, so pareto_search's grid predictions are reused
@@ -106,10 +119,10 @@ def coordinate_descent(model: QueryModel, start: PlanConfig,
         improved = False
         for key, values in axes.items():
             for v in values:
-                if key == "parallel_reads":
-                    if cur.parallel_reads == v:
+                if key in SCALAR_AXES:
+                    if getattr(cur, key) == v:
                         continue
-                    cand = cur.replace(parallel_reads=v)
+                    cand = cur.replace(**{key: v})
                 else:
                     nt = cur.ntasks_dict
                     if nt.get(key) == v:
@@ -152,11 +165,16 @@ def pareto_search(model: QueryModel, evaluate, grid: list[PlanConfig], *,
             axes.setdefault(k, [])
             if v not in axes[k]:
                 axes[k].append(v)
-        axes.setdefault("parallel_reads", [])
-        if cfg.parallel_reads not in axes["parallel_reads"]:
-            axes["parallel_reads"].append(cfg.parallel_reads)
+        for k in SCALAR_AXES:
+            v = getattr(cfg, k)
+            axes.setdefault(k, [])
+            if v not in axes[k]:
+                axes[k].append(v)
     for vs in axes.values():
-        vs.sort()
+        try:
+            vs.sort()                 # numeric / boolean axes
+        except TypeError:             # shuffle axis mixes None and tuples
+            vs.sort(key=lambda v: (v is not None, str(v)))
     start = grid[0]
     descent = []
     memo = dict(preds)        # descents revisit grid members — no re-predict
@@ -233,7 +251,8 @@ class QueryEvaluator:
                 config.policy(self.base_policy), seed=self.seed,
                 max_parallel=self.max_parallel, compute_scale=0.0,
                 executor_workers=self.executor_workers)
-            plan = self.builder(config.ntasks_dict or None, **self.plan_kw)
+            plan = self.builder(config.ntasks_dict or None,
+                                **config.plan_kwargs(self.plan_kw))
             self.cache[config] = coord.run_query(plan)
         return self.cache[config]
 

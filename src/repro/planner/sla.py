@@ -15,6 +15,16 @@ Two levels, matching how the paper talks about latency targets:
     ``workload/driver.py`` + ``workload/pricing.py`` plug-in that lets
     ``benchmarks/breakeven.py`` price an SLA-constrained break-even
     frontier next to the unconstrained one (Fig 7 vs Fig 14).
+
+:func:`choice_spec` turns either selection (or a bare ``PlanConfig``)
+into an ``engine.run_queries`` spec — per-stage task counts AND plan
+options such as a searched §4.2 multi-stage shuffle — and
+``workload.mix.retune`` accepts the chosen config directly, so a
+multi-stage pick flows into single queries and whole mixes identically.
+
+Inputs here are simulator-confirmed ``SearchResult``s; outputs are frozen
+choice records. Determinism: selection is a pure, RNG-free function of
+its inputs, so the same frontier always yields the same choice.
 """
 from __future__ import annotations
 
@@ -101,6 +111,18 @@ def select_for_workload(run_workload, candidates: list[PlanConfig],
     p99, cpq, cfg = best
     return WorkloadSLAChoice(cfg, False, target_p99_s, p99, cpq,
                              tuple(evaluated))
+
+
+def choice_spec(choice, query: str, base_plan_kw: dict | None = None
+                ) -> tuple:
+    """``(query, ntasks, plan_kw)`` spec for ``engine.run_queries``
+    realising a selection — plan options included, so a searched
+    multi-stage shuffle pick reaches the coordinator for single queries
+    exactly as it did for the simulator confirmation. ``choice`` is an
+    :class:`SLAChoice`, a :class:`WorkloadSLAChoice`, or a bare
+    ``PlanConfig``."""
+    cfg = getattr(choice, "config", choice)
+    return (query, cfg.ntasks_dict, cfg.plan_kwargs(base_plan_kw))
 
 
 def sla_breakeven(choice: WorkloadSLAChoice, *, interarrivals=None,

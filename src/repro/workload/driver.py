@@ -1,17 +1,25 @@
 """WorkloadDriver (paper §6.5): a whole workload through ONE slot pool.
 
-Zips a sampled query mix with an arrival process, runs everything through
-``Coordinator.run_queries`` — one shared invocation-slot pool, so streams
-contend for the account-level parallel-invocation limit exactly as in the
-paper's concurrency experiment (Fig 13) — and returns one
-:class:`QueryRecord` per query (arrival, queue delay, latency, cost,
-backup-slot time) plus percentile summaries and workload-level aggregates
-(makespan, queries/hour, mean $/query) that feed the Fig-7 pricing
-frontier (:mod:`repro.workload.pricing`).
+Inputs: a list of :class:`~repro.workload.mix.QueryClass` (a sampled mix,
+optionally planner-retuned via ``mix.retune`` — per-stage task counts AND
+plan options such as a searched §4.2 multi-stage shuffle) and an arrival
+process from :mod:`repro.workload.arrivals`. The driver zips them and
+runs everything through ``Coordinator.run_queries`` — one shared
+invocation-slot pool, so streams contend for the account-level
+parallel-invocation limit exactly as in the paper's concurrency
+experiment (Fig 13).
 
-Determinism: with ``compute_scale=0`` engines, records are bit-identical
-for any ``executor_workers`` (the coordinator's virtual clock is a pure
-function of the seeds), so workload studies are reproducible byte-for-byte.
+Outputs: one :class:`QueryRecord` per query (arrival, queue delay,
+latency, cost, backup-slot time, per-request latency attribution) plus
+percentile summaries and workload-level aggregates (makespan,
+queries/hour, mean $/query) that feed the Fig-7 pricing frontier
+(:mod:`repro.workload.pricing`).
+
+Determinism guarantee: with ``compute_scale=0`` engines, records are
+bit-identical for any ``executor_workers`` (the coordinator's virtual
+clock is a pure function of the seeds), so workload studies are
+reproducible byte-for-byte — the property the CI regression gate
+(``benchmarks/check_regression.py``, see docs/BENCHMARKS.md) relies on.
 """
 from __future__ import annotations
 

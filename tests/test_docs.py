@@ -1,0 +1,43 @@
+"""Docs stay present, linked, and runnable (ISSUE 5 satellite).
+
+The heavyweight check (executing every python fence) lives in
+``tools/check_docs.py`` and runs as its own CI job; tier-1 keeps the
+cheap invariants — the files exist, intra-repo links resolve, and the
+README quickstart fence at least parses — so a broken docs change fails
+fast everywhere.
+"""
+import ast
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _load_checker():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist():
+    assert (REPO / "README.md").is_file()
+    assert (REPO / "docs" / "ARCHITECTURE.md").is_file()
+    assert (REPO / "docs" / "BENCHMARKS.md").is_file()
+
+
+def test_intra_repo_links_resolve():
+    cd = _load_checker()
+    failures = []
+    for path in cd.doc_files():
+        failures.extend(cd.check_links(path, path.read_text()))
+    assert not failures, failures
+
+
+def test_readme_quickstart_fence_parses():
+    cd = _load_checker()
+    fences = cd.python_fences((REPO / "README.md").read_text())
+    assert fences, "README must carry a runnable quickstart fence"
+    for body in fences:
+        ast.parse(body)          # syntax-valid; execution is the CI job

@@ -1,0 +1,224 @@
+"""Multi-stage shuffle in the planner's structural model (ISSUE 5).
+
+Pins the §4.2 closed forms three ways: the analytic model's combiner
+request counts against hand-computed formulas, the SIMULATOR's per-stage
+GET issues against the same formulas (regression: joins used to look the
+combiner stage up under the wrong name and silently re-read the
+producers), and the model against the simulator for searched multi-stage
+configs — plus the width-{1, 8} parity of a shuffle-axis search and the
+plumbing that flows a multi-stage pick into mixes and run specs.
+"""
+import dataclasses
+from collections import Counter
+
+from repro.core.engine import make_engine, oracle, run_query
+from repro.core.plan import combine_name, expand_combiners
+from repro.core.shuffle import clamped_splits
+from repro.core.stragglers import RSMPolicy, StragglerConfig, WSMPolicy
+from repro.planner import (PlanConfig, QueryEvaluator, QueryModel,
+                           calibrate, choice_spec, pareto_search)
+from repro.relational.tpch import q12_plan
+from repro.workload import TPCH_MIX, retune
+
+SF = 0.002
+TB = 100_000          # ~11 lineitem splits at SF — enough producers
+
+
+def _no_mitigation():
+    return StragglerConfig(rsm=RSMPolicy(enabled=False),
+                           wsm=WSMPolicy(enabled=False),
+                           doublewrite=False, backup_tasks=False)
+
+
+def _expected_counts(S, O, R, a, b):
+    """Hand-computed §4.2 closed forms for q12 at (scan_li=S, scan_ord=O,
+    join=R) under a multi(p=1/a, f=1/b) shuffle, per side clamped to
+    (a', b') = (min(a, R), min(b, s)):
+
+      scans:     S + O GETs (one whole-object read per split)
+      combiners: 2 * a' * s GETs per side (header + body per covered
+                 file; every file is read by exactly a' combiners)
+      join:      2 * (b'_l + b'_r) GETs per task (header + body per
+                 combined object; one partition-run x all file-splits)
+      final:     R GETs
+    """
+    a_l, b_l = clamped_splits(S, R, 1.0 / a, 1.0 / b)
+    a_r, b_r = clamped_splits(O, R, 1.0 / a, 1.0 / b)
+    gets = {"scan_li": S, "scan_ord": O,
+            combine_name("join", "left"): 2 * a_l * S,
+            combine_name("join", "right"): 2 * a_r * O,
+            "join": R * 2 * (b_l + b_r), "final": R}
+    tasks = {"scan_li": S, "scan_ord": O,
+             combine_name("join", "left"): a_l * b_l,
+             combine_name("join", "right"): a_r * b_r,
+             "join": R, "final": 1}
+    return gets, tasks
+
+
+# ------------------------------------------------------------ closed forms
+def test_model_combiner_counts_match_closed_forms():
+    """The analytic model's expected GET/PUT/invocation counts for a
+    multi-stage config are EXACTLY the §4.2 closed forms (no simulator)."""
+    S, O, R, a, b = 10, 3, 16, 4, 5
+    calib = dataclasses.replace(calibrate({}), polls_per_get=0.0)
+    profiles = {"scan_li": {"out_bytes": 50_000, "compute_s": 0.0},
+                "scan_ord": {"out_bytes": 30_000, "compute_s": 0.0},
+                "join": {"out_bytes": 8_000, "compute_s": 0.0},
+                "final": {"out_bytes": 400, "compute_s": 0.0}}
+    split_bytes = {"lineitem": [5_000] * S, "orders": [10_000] * O}
+    model = QueryModel("q12", calib, profiles, split_bytes)
+    cfg = PlanConfig.make({"join": R}, rsm=False, wsm=False,
+                          doublewrite=False, backup_tasks=False,
+                          shuffle=("multi", a, b))
+    pred = model.predict(cfg)
+    gets, tasks = _expected_counts(S, O, R, a, b)
+    assert abs(pred.cost.gets - sum(gets.values())) < 1e-6
+    assert pred.cost.invocations == sum(tasks.values())
+    # one primary PUT per task, no doublewrite twin
+    assert abs(pred.cost.puts - sum(tasks.values())) < 1e-6
+    # the multi-stage plan must save requests vs single-stage here
+    single = model.predict(cfg.replace(shuffle=("single",)))
+    assert pred.cost.gets < single.cost.gets
+
+
+def test_simulator_combiner_counts_match_closed_forms():
+    """The scheduler issues EXACTLY the closed-form §4.2 GET counts per
+    stage — the regression test for joins actually reading the combiner
+    outputs (they used to re-read the producers)."""
+    a, b = 2, 4
+    coord, tables = make_engine(sf=SF, seed=11, target_bytes=TB,
+                                compute_scale=0.0, record_events=True,
+                                policy=_no_mitigation())
+    S = len(coord.base_splits["lineitem"])
+    O = len(coord.base_splits["orders"])
+    R = 16
+    res = run_query(coord, "q12", {"join": R},
+                    shuffle={"strategy": "multi", "p": 1 / a, "f": 1 / b})
+    issued = Counter()
+    for (_t, name, _q, st, _ti, _rq, _info) in coord.event_log:
+        if name == "GET_ISSUE":
+            issued[st] += 1
+    gets, _ = _expected_counts(S, O, R, a, b)
+    assert dict(issued) == gets
+    # and the combined path must not change the query's answer
+    exp = oracle("q12", tables)
+    assert len(res.result) == len(exp)
+    for k in exp.column_names():
+        want, got = exp[k], res.result[k]
+        if hasattr(want, "decode"):
+            want, got = want.decode(), got.decode()
+        assert list(want) == list(got), k
+
+
+def test_expand_combiners_annotations():
+    """The shared expansion carries the structure the model reads."""
+    plan = q12_plan({"join": 8},
+                    shuffle={"strategy": "multi", "p": 1 / 2, "f": 1 / 2})
+    exp = expand_combiners(plan, "q12", {"lineitem": 6, "orders": 2})
+    names = [st["name"] for st in exp["stages"]]
+    cl = combine_name("join", "left")
+    assert cl in names and combine_name("join", "right") in names
+    cst = next(st for st in exp["stages"] if st["name"] == cl)
+    assert cst["splits"] == clamped_splits(6, 8, 0.5, 0.5)
+    assert cst["source_parts"] == 8
+    assert cst["tasks"] == len(cst["assign"])
+    join = next(st for st in exp["stages"] if st["name"] == "join")
+    assert cl in join["deps"]
+    # the caller's plan object is untouched
+    assert all(st["kind"] != "combine" for st in plan["stages"])
+
+
+# ---------------------------------------------------- model vs simulator
+def test_model_tracks_simulator_on_multi_configs():
+    coord, _ = make_engine(sf=SF, seed=11, target_bytes=TB,
+                           compute_scale=0.0, record_events=True)
+    model, _ = QueryModel.from_probe(coord, "q12", {"join": 8})
+    ev = QueryEvaluator(coord.store, coord.base_splits, "q12", seed=11,
+                        max_parallel=coord.max_parallel)
+    for sh in (("multi", 2, 2), ("multi", 4, 2)):
+        cfg = PlanConfig.make({"join": 16}, shuffle=sh)
+        pred = model.predict(cfg)
+        res = ev.result(cfg)
+        assert res.cost.gets and res.cost.puts
+        assert abs(pred.cost.gets - res.cost.gets) / res.cost.gets < 0.25
+        assert abs(pred.cost.puts - res.cost.puts) / res.cost.puts < 0.25
+        # task counts are structural; the sim adds §5 backup duplicates
+        assert abs(pred.cost.invocations - res.cost.invocations) \
+            / res.cost.invocations < 0.25
+    # a multi probe anchors too (from_probe no longer rejects the shape)
+    coord2, _ = make_engine(sf=SF, seed=11, target_bytes=TB,
+                            compute_scale=0.0, record_events=True)
+    model2, probe2 = QueryModel.from_probe(
+        coord2, "q12", {"join": 8},
+        plan_kw={"shuffle": {"strategy": "multi", "p": 0.5, "f": 0.5}})
+    pred2 = model2.predict(PlanConfig.make({"join": 8}))
+    assert abs(pred2.latency_s - probe2.latency_s) / probe2.latency_s < 1e-6
+
+
+# ------------------------------------------------------- search + parity
+def _shuffle_search(width):
+    coord, _ = make_engine(sf=SF, seed=11, target_bytes=TB,
+                           compute_scale=0.0, executor_workers=width,
+                           record_events=True)
+    model, _ = QueryModel.from_probe(coord, "q12", {"join": 16})
+    ev = QueryEvaluator(coord.store, coord.base_splits, "q12", seed=11,
+                        max_parallel=coord.max_parallel,
+                        executor_workers=width)
+    grid = [PlanConfig.make({"join": nt}, shuffle=sh)
+            for nt in (8, 16) for sh in (("single",), ("multi", 2, 2),
+                                         ("multi", 4, 2))]
+    return pareto_search(model, ev, grid,
+                         must_confirm=(grid[0],))
+
+
+def test_searched_multishuffle_width_parity():
+    """A search with the shuffle strategy/(p, f) axis is bit-identical
+    across executor widths {1, 8} — including the multi-stage combiner
+    stages' virtual timing."""
+    def sig(sr):
+        return tuple((p.config, p.pred_latency_s, p.pred_cost_usd,
+                      p.sim_latency_s, p.sim_cost_usd)
+                     for p in sr.frontier)
+    sr8 = _shuffle_search(8)
+    sr1 = _shuffle_search(1)
+    assert sig(sr8) == sig(sr1)
+    assert any(cfg.shuffle is not None
+               for p in sr8.confirmed for cfg in (p.config,))
+    # every confirmed multi config was priced by the model, not rejected
+    assert all(p.pred_latency_s > 0 and p.pred_cost_usd > 0
+               for p in sr8.confirmed)
+
+
+# ----------------------------------------------------------- pick plumbing
+def test_planconfig_shuffle_normalization():
+    c = PlanConfig.make({"join": 4},
+                        shuffle={"strategy": "multi", "p": 0.25, "f": 1 / 8})
+    assert c.shuffle == ("multi", 4, 8)
+    assert c.shuffle_dict == {"strategy": "multi", "p": 0.25, "f": 0.125}
+    assert c.plan_kwargs({"x": 1}) == {"x": 1, "shuffle": c.shuffle_dict}
+    assert PlanConfig.make().plan_kwargs() == {}
+    assert PlanConfig.make(shuffle="single").shuffle == ("single",)
+    assert c.replace(shuffle=None).shuffle is None
+    # hashable + dedupable: equal specs collapse to one grid point
+    assert len({c, PlanConfig.make({"join": 4},
+                                   shuffle=("multi", 4, 8))}) == 1
+
+
+def test_retune_and_choice_spec_flow_multi_picks():
+    cfg = PlanConfig.make({"join": 4}, shuffle=("multi", 2, 2))
+    tuned = retune(TPCH_MIX, {"q12": cfg})
+    by_q = {c.query: c for c in tuned}
+    assert by_q["q12"].ntasks == {"join": 4}
+    assert by_q["q12"].plan_kw == {"shuffle": cfg.shuffle_dict}
+    assert by_q["q1"].plan_kw is None                 # untouched
+    plan = by_q["q12"].build_plan()
+    join = next(st for st in plan["stages"] if st["name"] == "join")
+    assert join["shuffle"]["strategy"] == "multi"
+    # explicit two-part form behaves identically
+    tuned2 = retune(TPCH_MIX, {"q12": {"ntasks": {"join": 4},
+                                       "plan_kw": {"shuffle":
+                                                   cfg.shuffle_dict}}})
+    assert {c.query: c for c in tuned2}["q12"] == by_q["q12"]
+    # choice_spec: the engine.run_queries realization of a pick
+    assert choice_spec(cfg, "q12") == \
+        ("q12", {"join": 4}, {"shuffle": cfg.shuffle_dict})

@@ -1,0 +1,109 @@
+"""Docs gate (ISSUE 5): the documentation must stay runnable and linked.
+
+Checks, over ``README.md`` and ``docs/*.md``:
+
+  * every ```` ```python ```` code fence executes cleanly with
+    ``PYTHONPATH=src`` from the repo root (fences tagged with any other
+    language — ``bash``, ``text`` — are presentation-only and skipped);
+  * every intra-repo markdown link ``[text](path)`` resolves to an
+    existing file or directory (external ``http(s)://``, ``mailto:`` and
+    pure ``#anchor`` links are skipped; an ``#anchor`` suffix on a repo
+    path is stripped before the existence check).
+
+Usage (CI runs exactly this):
+
+    python tools/check_docs.py
+
+Exit code 0 = all docs pass; failures are listed one per line.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DOC_GLOBS = ["README.md", "docs/*.md"]
+FENCE_RE = re.compile(r"^```(\w*)[^\n]*\n(.*?)^```\s*$",
+                      re.MULTILINE | re.DOTALL)
+# [text](target) — excluding images' alt text handling is not needed;
+# ![alt](img) links are checked the same way
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+RUN_TIMEOUT_S = 300
+
+
+def doc_files() -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for g in DOC_GLOBS:
+        out.extend(sorted(REPO.glob(g)))
+    return out
+
+
+def check_links(path: pathlib.Path, text: str) -> list[str]:
+    failures = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            failures.append(f"{path.relative_to(REPO)}: broken link "
+                            f"-> {target}")
+    return failures
+
+
+def python_fences(text: str) -> list[str]:
+    return [body for lang, body in FENCE_RE.findall(text)
+            if lang == "python"]
+
+
+def run_fence(path: pathlib.Path, idx: int, body: str) -> str | None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    try:
+        proc = subprocess.run([sys.executable, "-c", body], cwd=REPO,
+                              env=env, capture_output=True, text=True,
+                              timeout=RUN_TIMEOUT_S)
+    except subprocess.TimeoutExpired:
+        return (f"{path.relative_to(REPO)}: python fence #{idx} timed "
+                f"out after {RUN_TIMEOUT_S}s")
+    if proc.returncode != 0:
+        tail = (proc.stderr or proc.stdout).strip().splitlines()[-8:]
+        return (f"{path.relative_to(REPO)}: python fence #{idx} failed "
+                f"(exit {proc.returncode}):\n    " + "\n    ".join(tail))
+    return None
+
+
+def main() -> int:
+    files = doc_files()
+    if not files:
+        print("no docs found — README.md / docs/*.md missing",
+              file=sys.stderr)
+        return 1
+    failures: list[str] = []
+    fences_run = 0
+    for path in files:
+        text = path.read_text()
+        failures.extend(check_links(path, text))
+        for i, body in enumerate(python_fences(text)):
+            err = run_fence(path, i, body)
+            fences_run += 1
+            if err:
+                failures.append(err)
+    if failures:
+        print("docs gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"docs gate OK: {len(files)} files, {fences_run} python "
+          f"fences executed, links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
