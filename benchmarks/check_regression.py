@@ -7,7 +7,7 @@ Usage:
         [--baseline benchmarks/baselines/BENCH_workload.json] \
         [--tolerance 0.15]
 
-Two suites, auto-detected from the current file's name when ``--suite``
+Three suites, auto-detected from the current file's name when ``--suite``
 is omitted:
 
   * ``workload`` — the Fig-7 break-even threshold, the p50/p99 workload
@@ -17,7 +17,11 @@ is omitted:
     Q12 frontier's latency-optimal point, the per-query SLA pick, the
     workload-level SLA pick, and the §4.2 multishuffle crossover (the
     multi-stage config that dominates the best single-stage one on the
-    join-heavy plan).
+    join-heavy plan);
+  * ``scan`` — the ISSUE-6 columnar pushdown numbers: scan body bytes
+    with and without projection, the bytes ratio (gated >= 3x by the
+    benchmark itself), the zone-map pruned fraction, and the
+    latency/cost of the pushdown plan.
 
 The full benchmark catalog — which script emits which keys, what paper
 figure each reproduces, and how to refresh a baseline — is
@@ -70,6 +74,21 @@ SUITES = {
             "planner_multishuffle_latency_s",
             "planner_multishuffle_cost_usd",
             "planner_multishuffle_dominates",
+        ],
+    },
+    "scan": {
+        "baseline": "benchmarks/baselines/BENCH_scan.json",
+        "refresh_only": "scan_pushdown",
+        "keys": [
+            "scan_body_bytes_row_blob",
+            "scan_body_bytes_pushdown",
+            "scan_bytes_ratio",
+            "scan_row_blob_latency_s",
+            "scan_pushdown_latency_s",
+            "scan_pushdown_cost_usd",
+            "scan_pruned_fraction",
+            "scan_pruned_body_bytes",
+            "scan_width_parity_ok",
         ],
     },
 }
@@ -131,8 +150,12 @@ def main(argv: list[str] | None = None) -> int:
     suite = args.suite
     if suite is None:
         # infer from the rows themselves — temp filenames carry no signal
-        suite = "planner" if any(k.startswith("planner_") for k in current) \
-            else "workload"
+        if any(k.startswith("planner_") for k in current):
+            suite = "planner"
+        elif any(k.startswith("scan_") for k in current):
+            suite = "scan"
+        else:
+            suite = "workload"
     baseline_path = args.baseline or SUITES[suite]["baseline"]
 
     with open(baseline_path) as f:

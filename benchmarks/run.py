@@ -23,8 +23,8 @@ def main() -> None:
     from benchmarks import (breakeven, concurrency, cost_of_operation,
                             optimizations, parallel_reads, planner,
                             query_latency, roofline, scalability,
-                            shuffle_cost, straggler_cdf, stragglers,
-                            tunable, workload)
+                            scan_pushdown, shuffle_cost, straggler_cdf,
+                            stragglers, tunable, workload)
     mods = [("parallel_reads", parallel_reads),
             ("straggler_cdf", straggler_cdf),
             ("stragglers", stragglers),
@@ -38,7 +38,8 @@ def main() -> None:
             ("tunable", tunable),
             ("planner", planner),
             ("optimizations", optimizations),
-            ("roofline", roofline)]
+            ("roofline", roofline),
+            ("scan_pushdown", scan_pushdown)]
     only = set(args.only.split(",")) if args.only else None
     if only:
         unknown = only - {name for name, _ in mods}

@@ -94,13 +94,13 @@ from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 import numpy as np
 
 from repro.core.cost import WORKER_MEM_GB, QueryCost
-from repro.core.plan import (combine_name, expand_combiners, stage_by_name,
-                             validate_plan)
+from repro.core.plan import (combine_name, expand_combiners, infer_pushdown,
+                             stage_by_name, validate_plan)
 from repro.core.stragglers import StragglerConfig
 from repro.core.worker import PartInput, TaskResult, Worker
 from repro.objectstore.latency import poll_until_visible, visible_twin
 from repro.objectstore.store import ObjectStore
-from repro.relational.table import Table, deserialize_table
+from repro.relational.table import Table, decode_object, object_meta
 
 INVOKE_OVERHEAD_S = 0.030            # Lambda invoke + runtime startup
 COLD_STRAGGLER_PROB = 0.01           # slow-worker tail (backup-task target)
@@ -127,6 +127,7 @@ class QueryResult:
     dup_gets: int = 0            # §5.1 RSM duplicate GETs (in cost.gets)
     dup_puts: int = 0            # §5.2 WSM duplicate PUTs (in cost.puts)
     poll_gets: int = 0           # §3.3.1 404 visibility polls (in cost.gets)
+    columns_read: int = 0        # column segments decoded across all tasks
     # per-request latency attribution, accumulated at event pops (virtual
     # order -> bit-identical across executor widths): queue_s (slot wait),
     # invoke_s, get_s / put_s (issue->effective completion, task-parallel
@@ -224,6 +225,8 @@ class _Run:
         self.keys: dict[str, list] = {}
         self.ends: dict[str, list[float]] = {}
         self.nparts: dict[str, int] = {}
+        self.outcols: dict[str, list[int]] = {}   # per-task output columns
+        self.columns_read = 0
         self.gets = self.puts = self.invocations = self.backups = 0
         self.dup_gets = self.dup_puts = self.poll_gets = 0
         self.task_seconds = 0.0
@@ -276,6 +279,7 @@ class Coordinator:
         self._small_cache: dict[str, Table] = {}
         self._cache_lock = threading.Lock()
         self._name_counts: dict[str, int] = {}
+        self._schema_cache: dict[str, dict | None] = {}
 
     # ------------------------------------------------------------ helpers
     def _base_reader(self, worker: Worker):
@@ -284,7 +288,7 @@ class Coordinator:
             with self._cache_lock:
                 cached = self._small_cache.get(table)
             if cached is None:
-                tabs = [deserialize_table(self.store.get(k))
+                tabs = [decode_object(self.store.get(k), key=k)
                         for k in self.base_splits[table]]
                 cached = Table.concat(tabs)
                 with self._cache_lock:
@@ -292,6 +296,19 @@ class Coordinator:
             worker.client.gets += len(self.base_splits[table])
             return cached
         return read
+
+    def _base_schema(self, table: str) -> dict | None:
+        """Column name -> kind ("num" | "dict") of a base table, sniffed
+        lazily from its first split's header (None when the splits are
+        plain serialize_table blobs — micro-test fixtures — in which case
+        scans of that table fall back to whole-object reads)."""
+        if table not in self._schema_cache:
+            keys = self.base_splits.get(table)
+            meta = object_meta(self.store.get(keys[0]), key=keys[0]) \
+                if keys else None
+            self._schema_cache[table] = None if meta is None else {
+                n: meta["kinds"][n] for n in meta["columns"]}
+        return self._schema_cache[table]
 
     def _task_rng(self, run: _Run, sidx: int, tidx: int, stream: int
                   ) -> np.random.Generator:
@@ -341,10 +358,26 @@ class Coordinator:
     def _expand_plan(self, plan: dict, unique_name: str) -> dict:
         """Working copy with combiner stages spliced in for every multi-stage
         shuffle join (shared with the planner's structural model, so the two
-        can never disagree on the (p, f) work assignment)."""
-        return expand_combiners(
+        can never disagree on the (p, f) work assignment), then annotated
+        with the projection/predicate pushdown pass (also shared with the
+        model, so priced bytes match fetched bytes). Pushdown defaults ON;
+        a plan sets ``"pushdown": false`` to read whole partitions — the
+        planner search exposes this as a plan axis."""
+        expanded = expand_combiners(
             plan, unique_name,
             {t: len(ks) for t, ks in self.base_splits.items()})
+        if plan.get("pushdown", True):
+            schemas: dict[str, dict] = {}
+            for st in expanded["stages"]:
+                tables = [st["table"]] if st["kind"] == "scan" else []
+                tables += [op["table"] for op in st.get("ops", [])
+                           if op.get("op") == "broadcast_join"]
+                for tb in tables:
+                    sch = self._base_schema(tb)
+                    if sch is not None:
+                        schemas[tb] = sch
+            infer_pushdown(expanded, schemas)
+        return expanded
 
     # ------------------------------------------------------------ run API
     def run_query(self, plan: dict, t0: float = 0.0) -> QueryResult:
@@ -406,6 +439,7 @@ class Coordinator:
                 stage.tasks = [_Task() for _ in range(stage.n)]
                 run.keys[stage.st["name"]] = [None] * stage.n
                 run.ends[stage.st["name"]] = [0.0] * stage.n
+                run.outcols[stage.st["name"]] = [0] * stage.n
             runs.append(run)
 
         open_loop = [a for a, dep in zip(arrivals, afters) if dep is None]
@@ -547,6 +581,8 @@ class Coordinator:
         task.resolved = True
         task.result = r
         run.keys[stage.st["name"]][tidx] = r.key
+        run.outcols[stage.st["name"]][tidx] = r.out_ncols
+        run.columns_read += r.columns_read
         run.invocations += 1
         run.gets += r.gets
         run.puts += r.puts
@@ -916,7 +952,7 @@ class Coordinator:
             {k: (round(a - run.t0, 3), round(b - run.t0, 3))
              for k, (a, b) in run.stage_windows.items()},
             run.task_seconds, run.t0, queue_delay, run.backup_slot_s,
-            run.dup_gets, run.dup_puts, run.poll_gets,
+            run.dup_gets, run.dup_puts, run.poll_gets, run.columns_read,
             {"queue_s": queue_delay, **run.attr}, run.name)
 
     # ------------------------------------------------- calibration hooks
@@ -1017,7 +1053,8 @@ class Coordinator:
             src = st["source"]
             inputs = [PartInput(run.keys[src][fi], 0.0,
                                 run.nparts[src], spec["partitions"][0],
-                                spec["partitions"][1] - 1, src=(src, fi))
+                                spec["partitions"][1] - 1, src=(src, fi),
+                                n_cols=run.outcols[src][fi])
                       for fi in range(*spec["files"])]
             return lambda: w.run_combine(query, st, ti, inputs, start)
         if kind == "final_agg":
@@ -1041,6 +1078,7 @@ class Coordinator:
         """
         comb = combine_name(st["name"], side)
         src = st[side]
+        rc = (st.get("_read_cols") or {}).get(side)
         if comb in run.keys:                   # combined side
             cst = stage_by_name(run.plan, comb)
             out = []
@@ -1049,7 +1087,10 @@ class Coordinator:
                 if lo <= ti < hi:
                     out.append(PartInput(run.keys[comb][ci], 0.0,
                                          hi - lo, ti - lo, ti - lo,
-                                         src=(comb, ci)))
+                                         src=(comb, ci),
+                                         n_cols=run.outcols[comb][ci],
+                                         read_cols=rc))
             return out
-        return [PartInput(k, 0.0, run.nparts[src], ti, ti, src=(src, fi))
+        return [PartInput(k, 0.0, run.nparts[src], ti, ti, src=(src, fi),
+                          n_cols=run.outcols[src][fi], read_cols=rc)
                 for fi, k in enumerate(run.keys[src])]

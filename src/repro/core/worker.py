@@ -34,7 +34,9 @@ from repro.core.stragglers import StragglerConfig
 from repro.objectstore.client import ReadReq, RequestTimeline, StoreClient
 from repro.objectstore.store import ObjectStore
 from repro.relational import ops as OPS
-from repro.relational.table import Table, deserialize_table, serialize_table
+from repro.relational.table import (Table, decode_object, deserialize_segment,
+                                    deserialize_table, partitions_to_object,
+                                    serialize_table)
 
 
 @dataclasses.dataclass
@@ -45,6 +47,13 @@ class PartInput:
     the object's availability from the producer task's virtual end at read
     time (the end may not exist yet when this task is dispatched — §4.4
     pipelining); ``avail`` is the static fallback for base objects.
+
+    ``n_cols`` sizes the header GET (the producer's column count, known to
+    the coordinator from the producer's TaskResult or the base-table
+    schema). ``read_cols``/``bounds`` carry the plan's projection and
+    zone-map pushdown; they apply on single-partition reads only — a
+    contiguous range over a partition-major body spans every column of the
+    middle partitions of a run, so combiners read whole runs.
     """
     key: str
     avail: float
@@ -52,6 +61,9 @@ class PartInput:
     first: int
     last: int
     src: tuple[str, int] | None = None
+    n_cols: int = 0
+    read_cols: list | None = None
+    bounds: dict | None = None
 
 
 @dataclasses.dataclass
@@ -63,6 +75,8 @@ class TaskResult:
     out_bytes: int
     timeline: RequestTimeline
     result: object = None        # final stage only
+    out_ncols: int = 0           # columns in the partitioned output header
+    columns_read: int = 0        # column segments this task decoded
 
 
 def _apply_ops(t: Table, ops: list, base_reader) -> Table:
@@ -108,36 +122,57 @@ class Worker:
                 for k, a, s in inputs]
         return self.client.read_many(reqs, now)
 
-    def _read_partitions(self, inputs: list[PartInput], now: float,
-                         columns=None):
-        """Two range-GETs per input object (§3.2): header, partition run.
+    def _read_partitions(self, inputs: list[PartInput], now: float):
+        """Two range-GETs per input object (§3.2): header, then ONE
+        contiguous body range. Single-partition reads apply projection
+        (``read_cols``) and zone-map pruning (``bounds``) to shrink the
+        body range — a pruned partition issues a zero-length body GET so
+        request counts stay structural across pushdown settings.
 
         Returns (per-input list of per-partition Tables, virtual end).
         """
-        hdr_reqs = [ReadReq(pi.key, 0, FMT.header_size(pi.n_parts),
+        hdr_reqs = [ReadReq(pi.key, 0,
+                            FMT.header_size(pi.n_parts, pi.n_cols),
                             available_at=pi.avail, alt_key=self._alt(pi.key),
                             src=pi.src)
                     for pi in inputs]
         headers, t1 = self.client.read_many(hdr_reqs, now)
         body_reqs = []
         metas = []
-        for pi, hdr in zip(inputs, headers):
-            ends, dict_len, data_start = FMT.parse_header(hdr, pi.n_parts)
-            lo, hi = FMT.partition_range(ends, data_start, pi.first, pi.last)
-            metas.append((ends, data_start))
+        for pi, raw in zip(inputs, headers):
+            hdr = FMT.parse_header(raw, pi.n_parts, pi.n_cols, key=pi.key)
+            sel = None
+            if pi.read_cols is not None and pi.first == pi.last:
+                idx = {n: i for i, n in enumerate(hdr.columns)}
+                sel = sorted(idx[n] for n in pi.read_cols if n in idx)
+                if pi.bounds:
+                    zb = {idx[n]: (b[0], b[1])
+                          for n, b in pi.bounds.items() if n in idx}
+                    if zb and FMT.prune_partition(hdr, pi.first, zb):
+                        sel = []
+                lo, hi = FMT.covering_range(hdr, pi.first, sel)
+            else:
+                lo, hi = FMT.partition_range(hdr, pi.first, pi.last)
+            metas.append((hdr, sel))
             body_reqs.append(ReadReq(pi.key, lo, hi, available_at=pi.avail,
                                      alt_key=self._alt(pi.key), src=pi.src))
         bodies, t2 = self.client.read_many(body_reqs, t1)
         out: list[list[Table]] = []
-        for pi, (ends, data_start), body, req in zip(inputs, metas, bodies,
-                                                     body_reqs):
+        for pi, (hdr, sel), body, req in zip(inputs, metas, bodies,
+                                             body_reqs):
             base = req.start
             tabs = []
             for j in range(pi.first, pi.last + 1):
-                lo = data_start + (ends[j - 1] if j > 0 else 0) - base
-                hi = data_start + ends[j] - base
-                tabs.append(deserialize_table(body[lo:hi], columns)
-                            if hi > lo else Table({}))
+                cis = sel if sel is not None else range(hdr.n_columns)
+                cols = {}
+                for ci in cis:
+                    slo, shi = hdr.seg_bounds(j, ci)
+                    cols[hdr.columns[ci]] = deserialize_segment(
+                        body[hdr.data_start + slo - base:
+                             hdr.data_start + shi - base])
+                self.client.columns_read += len(cols)
+                t = Table(cols)
+                tabs.append(t if len(t) else Table({}))
             out.append(tabs)
         return out, t2
 
@@ -145,10 +180,24 @@ class Worker:
     def run_scan(self, query: str, st: dict, task_id: int, split_key: str,
                  avail: float, now: float, n_out_parts: int,
                  base_reader) -> TaskResult:
-        datas, t_in = self._read_whole([(split_key, avail, None)], now)
-        c0 = time.thread_time()
-        t = deserialize_table(datas[0], st.get("columns"))
-        t = _apply_ops(t, st.get("ops", []), base_reader)
+        if st.get("_n_base_cols") and st.get("_read_cols") is not None:
+            # columnar base split: header GET + covering body range over
+            # the projected columns, zone-map pruned (plan.infer_pushdown)
+            pi = PartInput(split_key, avail, 1, 0, 0,
+                           n_cols=st["_n_base_cols"],
+                           read_cols=st["_read_cols"],
+                           bounds=st.get("_read_bounds"))
+            tabs, t_in = self._read_partitions([pi], now)
+            c0 = time.thread_time()
+            t = tabs[0][0]
+        else:
+            datas, t_in = self._read_whole([(split_key, avail, None)], now)
+            c0 = time.thread_time()
+            t = decode_object(datas[0], st.get("columns"), key=split_key)
+        # a zone-map-pruned split decodes to a column-less table; its ops
+        # are provably no-rows-pass, so skip them (filters would KeyError)
+        if t.cols:
+            t = _apply_ops(t, st.get("ops", []), base_reader)
         comp = (time.thread_time() - c0) * self.compute_scale
         return self._emit(query, st, task_id, t, t_in + comp, comp,
                           n_out_parts)
@@ -178,18 +227,19 @@ class Worker:
         per_file, t_in = self._read_partitions(inputs, now)
         first, last = inputs[0].first, inputs[0].last
         c0 = time.thread_time()
-        parts = []
-        for off in range(last - first + 1):
-            merged = Table.concat([tabs[off] for tabs in per_file])
-            parts.append(serialize_table(merged))
+        parts = [Table.concat([tabs[off] for tabs in per_file])
+                 for off in range(last - first + 1)]
         comp = (time.thread_time() - c0) * self.compute_scale
-        payload = FMT.write_partitioned(parts)
+        payload = partitions_to_object(parts)
         key = out_key(query, st["name"], task_id)
         self.timeline.record_compute(comp)
         self.client.write(key, payload, t_in + comp,
                           bill_nbytes=st.get("out_bytes_floor"))
         return TaskResult(key, self.client.gets, self.client.puts,
-                          comp, len(payload), self.timeline)
+                          comp, len(payload), self.timeline,
+                          out_ncols=next((len(p.cols) for p in parts
+                                          if p.cols), 0),
+                          columns_read=self.client.columns_read)
 
     def run_final(self, query: str, st: dict,
                   inputs: list[tuple[str, float, tuple[str, int] | None]],
@@ -210,7 +260,8 @@ class Worker:
         self.client.write(key, payload, t_in + comp,
                           bill_nbytes=st.get("out_bytes_floor"))
         return TaskResult(key, self.client.gets, self.client.puts,
-                          comp, len(payload), self.timeline, result=t)
+                          comp, len(payload), self.timeline, result=t,
+                          columns_read=self.client.columns_read)
 
     # ------------------------------------------------------------- output
     def _emit(self, query, st, task_id, t: Table, now, comp,
@@ -219,15 +270,18 @@ class Worker:
         # a partitioned producer always writes the §3.2 format — including
         # the degenerate 1-consumer fan-out (planner ntasks=1 configs), so
         # consumers can parse the header unconditionally
+        ncols = 0
         if st.get("partition") and n_out_parts >= 1:
             parts = OPS.op_partition(t, st["partition"]["key"], n_out_parts) \
                 if len(t) else [Table({})] * n_out_parts
-            payload = FMT.write_partitioned(
-                [serialize_table(p) for p in parts])
+            payload = partitions_to_object(parts)
+            ncols = next((len(p.cols) for p in parts if p.cols), 0)
         else:
             payload = serialize_table(t)
         self.timeline.record_compute(comp)
         self.client.write(key, payload, now,
                           bill_nbytes=st.get("out_bytes_floor"))
         return TaskResult(key, self.client.gets, self.client.puts,
-                          comp, len(payload), self.timeline)
+                          comp, len(payload), self.timeline,
+                          out_ncols=ncols,
+                          columns_read=self.client.columns_read)

@@ -103,6 +103,10 @@ class StoreClient:
         self.timeline = timeline
         self.gets = 0
         self.puts = 0
+        # column segments decoded by this client's task (recording mode):
+        # worker._read_partitions bumps it so projection pushdown is
+        # observable per task — a one-column aggregate reads exactly 1
+        self.columns_read = 0
 
     # ------------------------------------------------------------------ read
     def _one_get(self, req: ReadReq, t_start: float, concurrency: int
@@ -187,4 +191,5 @@ class StoreClient:
         return end
 
     def stats(self) -> dict:
-        return {"gets": self.gets, "puts": self.puts}
+        return {"gets": self.gets, "puts": self.puts,
+                "columns_read": self.columns_read}

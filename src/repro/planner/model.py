@@ -51,10 +51,11 @@ import math
 
 from repro.core.cost import WORKER_MEM_GB, QueryCost
 from repro.core.format import header_size
-from repro.core.plan import (combine_name, expand_combiners,
+from repro.core.plan import (combine_name, expand_combiners, infer_pushdown,
                              resolved_tasks, stage_by_name)
 from repro.core.stragglers import StragglerConfig
 from repro.planner.calibrate import Calibration, calibrate
+from repro.relational.table import object_meta
 from repro.relational.tpch import QUERIES
 
 
@@ -95,6 +96,11 @@ class PlanConfig:
     # None = builder default; ("single",) | ("multi", a, b) with a = 1/p
     # partition-splits and b = 1/f file-splits (see _norm_shuffle)
     shuffle: tuple | None = None
+    # §3.2 columnar projection/zone-map pushdown: reads cost one extra
+    # header GET per scan split but fetch only the covering column range
+    # (GETs are priced per request, transfer is free — so pushdown trades
+    # dollars for latency and is a genuine Pareto axis)
+    pushdown: bool = True
 
     @staticmethod
     def make(ntasks: dict | None = None, **kw) -> "PlanConfig":
@@ -157,7 +163,8 @@ class QueryModel:
 
     def __init__(self, query, calibration: Calibration, profiles: dict,
                  split_bytes: dict, *, max_parallel: int = 1000,
-                 plan_kw: dict | None = None, latency_bias: float = 1.0):
+                 plan_kw: dict | None = None, latency_bias: float = 1.0,
+                 base_meta: dict | None = None):
         # ``query`` is a name in relational.tpch.QUERIES or any plan
         # builder callable (ntasks, **plan_kw) -> plan dict
         self.builder = QUERIES[query] if isinstance(query, str) else query
@@ -168,6 +175,11 @@ class QueryModel:
         self.split_bytes = split_bytes    # table -> [split sizes]
         self.max_parallel = max(max_parallel, 1)
         self.plan_kw = dict(plan_kw or {})
+        # table -> [per-split object_meta dicts] (columns, kinds, col_bytes,
+        # zone maps). Present when the probe harvested columnar base splits;
+        # enables EXACT projected-scan byte pricing. Without it, scans are
+        # priced as 1 whole-object GET (the pushdown-off read pattern).
+        self.base_meta = dict(base_meta or {})
         # probe-anchored multiplicative correction: the analytic model is
         # built to RANK configs; anchoring it to the one measured run puts
         # predicted latencies on the simulator's absolute scale too
@@ -197,8 +209,14 @@ class QueryModel:
                           probe_wsm=coord.policy.wsm.enabled)
         split_bytes = {t: [coord.store.size(k) for k in ks]
                        for t, ks in coord.base_splits.items()}
+        base_meta = {}
+        for t, ks in coord.base_splits.items():
+            metas = [object_meta(coord.store.get(k), key=k) for k in ks]
+            if metas and all(m is not None for m in metas):
+                base_meta[t] = metas
         model = cls(query, calib, profiles, split_bytes,
-                    max_parallel=coord.max_parallel, plan_kw=plan_kw)
+                    max_parallel=coord.max_parallel, plan_kw=plan_kw,
+                    base_meta=base_meta)
         probe_cfg = PlanConfig.make(
             ntasks, parallel_reads=coord.policy.parallel_reads,
             rsm=coord.policy.rsm.enabled, wsm=coord.policy.wsm.enabled,
@@ -234,6 +252,32 @@ class QueryModel:
                    for op in st.get("ops", [])
                    if op["op"] == "broadcast_join")
 
+    def _base_schemas(self) -> dict:
+        """table -> {column: kind} in storage order, from harvested split
+        headers — the infer_pushdown input (same pass the coordinator runs,
+        so model and simulator agree on every read's column set)."""
+        return {t: {n: m[0]["kinds"][n] for n in m[0]["columns"]}
+                for t, m in self.base_meta.items()}
+
+    @staticmethod
+    def _covering_bytes(meta: dict, read_cols, bounds) -> float:
+        """Exact §3.2 body-GET size of one split under pushdown: zero when
+        the split's zone maps prune it, else the contiguous covering range
+        over the projected columns (interior unneeded columns included —
+        the two-range-GET contract allows ONE body range)."""
+        idx = {n: i for i, n in enumerate(meta["columns"])}
+        sel = sorted(idx[n] for n in read_cols if n in idx)
+        if not sel:
+            return 0.0
+        for n, b in (bounds or {}).items():
+            if n in idx:
+                slo, shi = meta["stats"][n]
+                if shi < b[0] or slo > b[1]:
+                    return 0.0
+        names = meta["columns"]
+        return float(sum(meta["col_bytes"][names[i]]
+                         for i in range(sel[0], sel[-1] + 1)))
+
     def _sigma_rel(self, prof: dict) -> float:
         durs = prof.get("task_durs", [])
         if len(durs) < 2:
@@ -256,6 +300,16 @@ class QueryModel:
         # resolve through the same shared core.plan helpers
         plan = expand_combiners(plan, plan.get("name", self.query),
                                 self._split_counts)
+        # annotate the model's private copy with the SAME pushdown pass the
+        # coordinator runs: _read_cols/_read_bounds price scan bytes, and
+        # _out_ncols sizes every header GET (header_size grows with
+        # n_partitions x n_columns). Annotations are computed even when
+        # config.pushdown is off — producers write all columns either way,
+        # so header sizes do not depend on the pushdown setting.
+        schemas = self._base_schemas()
+        if schemas:
+            infer_pushdown(plan, schemas)
+        pushdown = config.pushdown
         ntasks = resolved_tasks(plan, self._split_counts)
         calib = self.calib
         lanes = max(config.parallel_reads, 1)
@@ -279,9 +333,28 @@ class QueryModel:
             n_reads = 0          # store reads per task (timeline-visible)
             if kind == "scan":
                 sizes = self.split_bytes[st["table"]]
-                io_s = self._batch_s(1, sum(sizes) / len(sizes), lanes,
-                                     get_tail)
-                n_reads = 1
+                metas = self.base_meta.get(st["table"])
+                rc = st.get("_read_cols")
+                if pushdown and metas and rc is not None \
+                        and st.get("_n_base_cols"):
+                    # header GET + covering body GET per split; the body is
+                    # priced exactly from the harvested per-split column
+                    # byte counts and zone maps (pruned split -> 0 bytes,
+                    # its GET is still issued — structural parity)
+                    bodies = [self._covering_bytes(
+                        m, rc, st.get("_read_bounds")) for m in metas]
+                    io_s = self._batch_s(
+                        1, header_size(1, st["_n_base_cols"]), lanes,
+                        get_tail)
+                    io_s += self._batch_s(1, sum(bodies) / len(bodies),
+                                          lanes, get_tail)
+                    n_reads = 2
+                else:
+                    # pushdown off (or plain-blob splits): one whole-object
+                    # GET, all bytes
+                    io_s = self._batch_s(1, sum(sizes) / len(sizes), lanes,
+                                         get_tail)
+                    n_reads = 1
             elif kind == "combine":
                 # §4.2 combiner: T = a*b tasks; the stage as a whole reads
                 # every producer file a times (one header + one body range
@@ -294,8 +367,10 @@ class QueryModel:
                 file_reads = sum(sp["files"][1] - sp["files"][0]
                                  for sp in st["assign"])
                 per_task = file_reads / T          # ~s/b files per combiner
+                # combine output columns == source columns (_out_ncols)
                 io_s = self._batch_s(per_task,
-                                     header_size(st["source_parts"]),
+                                     header_size(st["source_parts"],
+                                                 st.get("_out_ncols", 1)),
                                      lanes, get_tail)
                 io_s += self._batch_s(per_task,
                                       src_bytes / max(file_reads, 1),
@@ -316,8 +391,14 @@ class QueryModel:
                                   .get("out_bytes", 0)
                                   + self.profiles.get(st["right"], {})
                                   .get("out_bytes", 0))
-                    io_s = self._batch_s(n_src, header_size(T), lanes,
-                                         get_tail)
+                    # per-side header sizes (each side's producer writes
+                    # its own column count), blended over the read batch
+                    hdr = sum(
+                        ntasks[st[side]] * header_size(
+                            T, stage_by_name(plan, st[side])
+                            .get("_out_ncols", 1))
+                        for side in ("left", "right")) / n_src
+                    io_s = self._batch_s(n_src, hdr, lanes, get_tail)
                     io_s += self._batch_s(n_src, body_total / (T * n_src),
                                           lanes, get_tail)
                     n_reads = 2 * n_src
@@ -331,9 +412,11 @@ class QueryModel:
                             .get("out_bytes", 0)
                         # a combined object holds one partition run of
                         # ceil(T/a) partitions; its header scales with that
-                        io_s += self._batch_s(b,
-                                              header_size(math.ceil(T / a)),
-                                              lanes, get_tail)
+                        # times the side's column count
+                        io_s += self._batch_s(
+                            b, header_size(math.ceil(T / a),
+                                           cst.get("_out_ncols", 1)),
+                            lanes, get_tail)
                         io_s += self._batch_s(b, side_bytes / (T * b),
                                               lanes, get_tail)
                         n_reads += 2 * b

@@ -38,7 +38,7 @@ from repro.relational.tpch import QUERIES
 # PlanConfig fields searchable as whole-config axes (everything except the
 # per-stage ntasks keys, which address into the ntasks mapping instead)
 SCALAR_AXES = ("parallel_reads", "shuffle", "rsm", "wsm", "backup_tasks",
-               "doublewrite")
+               "doublewrite", "pushdown")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -253,6 +253,8 @@ class QueryEvaluator:
                 executor_workers=self.executor_workers)
             plan = self.builder(config.ntasks_dict or None,
                                 **config.plan_kwargs(self.plan_kw))
+            # pushdown is a coordinator-level plan key, not a builder kwarg
+            plan["pushdown"] = config.pushdown
             self.cache[config] = coord.run_query(plan)
         return self.cache[config]
 

@@ -33,7 +33,9 @@ def _leaf_bytes(arr: np.ndarray, n_shards: int) -> bytes:
     flat = arr.reshape(-1).view(np.uint8)
     cuts = np.linspace(0, flat.size, n_shards + 1).astype(int)
     parts = [flat[cuts[i]:cuts[i + 1]].tobytes() for i in range(n_shards)]
-    return FMT.write_partitioned(parts)
+    # one opaque "raw" column per shard-partition: the format moves segment
+    # bytes, it does not care that they are not table columns
+    return FMT.write_partitioned(["raw"], [[p] for p in parts])
 
 
 class CheckpointManager:
@@ -100,16 +102,16 @@ class CheckpointManager:
         end = now
         for i, meta in enumerate(manifest["leaves"]):
             key = f"{self._prefix(step)}/leaf{i}"
-            hdr_req = [ReadReq(key, 0, FMT.header_size(n))]
+            hdr_req = [ReadReq(key, 0, FMT.header_size(n, 1))]
             (hdr,), t1 = client.read_many(hdr_req, now)
-            ends, _, data_start = FMT.parse_header(hdr, n)
+            h = FMT.parse_header(hdr, n, 1, key=key)
             if shard is None:
                 first, last = 0, n - 1
             else:
                 si, sn = shard
                 per = n // sn
                 first, last = si * per, (si + 1) * per - 1
-            lo, hi = FMT.partition_range(ends, data_start, first, last)
+            lo, hi = FMT.partition_range(h, first, last)
             (body,), t2 = client.read_many([ReadReq(key, lo, hi)], t1)
             end = max(end, t2)
             arr = np.frombuffer(body, np.uint8)

@@ -14,24 +14,41 @@ from repro.relational.table import (DictColumn, Table, deserialize_table,
 
 # --------------------------------------------------------------- format §3.2
 @settings(max_examples=40, deadline=None)
-@given(st.lists(st.binary(min_size=0, max_size=200), min_size=1, max_size=16),
+@given(st.lists(st.lists(st.binary(min_size=0, max_size=120),
+                         min_size=1, max_size=5),
+                min_size=1, max_size=12),
        st.binary(min_size=0, max_size=64))
 def test_partitioned_format_roundtrip(parts, dictionary):
-    """Any partition (or contiguous run) is recoverable with TWO range
-    reads: header, then [start, end)."""
-    obj = FMT.write_partitioned(parts, dictionary)
+    """Any partition run is recoverable with TWO range reads (header, then
+    [start, end)) covering every column of the run; any single partition's
+    column subset is recoverable with the same two reads over the covering
+    range."""
+    c = min(len(p) for p in parts)          # uniform column count
+    parts = [p[:c] for p in parts]
     n = len(parts)
-    header = obj[:FMT.header_size(n)]
-    ends, dict_len, data_start = FMT.parse_header(header, n)
-    assert dict_len == len(dictionary)
-    for i in range(n):
-        lo, hi = FMT.partition_range(ends, data_start, i)
-        assert obj[lo:hi] == parts[i]
-    # contiguous runs cost the same two reads
+    cols = [f"c{i}" for i in range(c)]
+    obj = FMT.write_partitioned(cols, parts, dictionary=dictionary)
+    header = obj[:FMT.header_size(n, c)]
+    hdr = FMT.parse_header(header, n, c)
+    assert hdr.columns == cols
+    assert hdr.dict_len == len(dictionary)
+    assert obj[FMT.header_size(n, c):hdr.data_start] == dictionary
+    # contiguous partition runs cost the same two reads
     for i in range(n):
         for j in range(i, n):
-            lo, hi = FMT.partition_range(ends, data_start, i, j)
-            assert obj[lo:hi] == b"".join(parts[i:j + 1])
+            lo, hi = FMT.partition_range(hdr, i, j)
+            assert obj[lo:hi] == b"".join(
+                b"".join(p) for p in parts[i:j + 1])
+    # projection: the covering range of any column subset of one partition
+    for i in range(n):
+        for sel in ([0], [c - 1], list(range(c))):
+            lo, hi = FMT.covering_range(hdr, i, sel)
+            body = obj[lo:hi]
+            base = lo
+            for ci in sel:
+                slo, shi = hdr.seg_bounds(i, ci)
+                assert body[hdr.data_start + slo - base:
+                            hdr.data_start + shi - base] == parts[i][ci]
 
 
 @settings(max_examples=30, deadline=None)

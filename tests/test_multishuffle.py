@@ -30,12 +30,15 @@ def _no_mitigation():
                            doublewrite=False, backup_tasks=False)
 
 
-def _expected_counts(S, O, R, a, b):
+def _expected_counts(S, O, R, a, b, scan_gets=2):
     """Hand-computed §4.2 closed forms for q12 at (scan_li=S, scan_ord=O,
     join=R) under a multi(p=1/a, f=1/b) shuffle, per side clamped to
     (a', b') = (min(a, R), min(b, s)):
 
-      scans:     S + O GETs (one whole-object read per split)
+      scans:     scan_gets * (S + O). Columnar base splits cost 2 GETs per
+                 split (header + covering body range, ISSUE 6 pushdown);
+                 pass scan_gets=1 for the whole-object read pattern (a
+                 model built WITHOUT base metadata, or pushdown off)
       combiners: 2 * a' * s GETs per side (header + body per covered
                  file; every file is read by exactly a' combiners)
       join:      2 * (b'_l + b'_r) GETs per task (header + body per
@@ -44,7 +47,7 @@ def _expected_counts(S, O, R, a, b):
     """
     a_l, b_l = clamped_splits(S, R, 1.0 / a, 1.0 / b)
     a_r, b_r = clamped_splits(O, R, 1.0 / a, 1.0 / b)
-    gets = {"scan_li": S, "scan_ord": O,
+    gets = {"scan_li": scan_gets * S, "scan_ord": scan_gets * O,
             combine_name("join", "left"): 2 * a_l * S,
             combine_name("join", "right"): 2 * a_r * O,
             "join": R * 2 * (b_l + b_r), "final": R}
@@ -71,7 +74,9 @@ def test_model_combiner_counts_match_closed_forms():
                           doublewrite=False, backup_tasks=False,
                           shuffle=("multi", a, b))
     pred = model.predict(cfg)
-    gets, tasks = _expected_counts(S, O, R, a, b)
+    # no base metadata on a directly-constructed model -> scans are priced
+    # as 1 whole-object GET each
+    gets, tasks = _expected_counts(S, O, R, a, b, scan_gets=1)
     assert abs(pred.cost.gets - sum(gets.values())) < 1e-6
     assert pred.cost.invocations == sum(tasks.values())
     # one primary PUT per task, no doublewrite twin
