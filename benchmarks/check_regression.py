@@ -3,12 +3,13 @@ job when gated benchmark numbers drift from the committed baseline.
 
 Usage:
     python -m benchmarks.check_regression BENCH_workload.json \
-        [--suite workload|planner] \
+        [--suite workload|planner|scan|faults] \
         [--baseline benchmarks/baselines/BENCH_workload.json] \
         [--tolerance 0.15]
 
-Three suites, auto-detected from the current file's name when ``--suite``
-is omitted:
+The suites live in ONE registry — ``benchmarks.common.SUITES`` — shared
+with ``run.py``; each suite is auto-detected from the current file's key
+prefixes when ``--suite`` is omitted:
 
   * ``workload`` — the Fig-7 break-even threshold, the p50/p99 workload
     latencies per arrival process, and the per-request SLA attribution
@@ -21,7 +22,11 @@ is omitted:
   * ``scan`` — the ISSUE-6 columnar pushdown numbers: scan body bytes
     with and without projection, the bytes ratio (gated >= 3x by the
     benchmark itself), the zone-map pruned fraction, and the
-    latency/cost of the pushdown plan.
+    latency/cost of the pushdown plan;
+  * ``faults`` — the ISSUE-7 fault/cold-start numbers: p99.9 task
+    latency and cost overhead vs injected failure rate, warm-pool
+    cold-start wave counts, journaled-failover resume equality, and the
+    retry-budget-vs-naive-rerun cost/p99 ratios.
 
 The full benchmark catalog — which script emits which keys, what paper
 figure each reproduces, and how to refresh a baseline — is
@@ -39,59 +44,9 @@ import argparse
 import json
 import sys
 
-TOLERANCE = 0.15
+from benchmarks.common import SUITES
 
-SUITES = {
-    "workload": {
-        "baseline": "benchmarks/baselines/BENCH_workload.json",
-        "refresh_only": "workload,breakeven",
-        "keys": [
-            "fig7_breakeven_threshold_s",
-            "workload_uniform_latency_p50_s",
-            "workload_uniform_latency_p99_s",
-            "workload_poisson_latency_p50_s",
-            "workload_poisson_latency_p99_s",
-            "workload_bursty_latency_p50_s",
-            "workload_bursty_latency_p99_s",
-            "workload_uniform_attr_queue_s_mean",
-            "workload_uniform_attr_visibility_s_mean",
-            "workload_uniform_attr_get_s_mean",
-            "workload_uniform_attr_put_s_mean",
-            "workload_uniform_attr_dup_saved_s_mean",
-        ],
-    },
-    "planner": {
-        "baseline": "benchmarks/baselines/BENCH_planner.json",
-        "refresh_only": "planner",
-        "keys": [
-            "planner_sim_fraction",
-            "planner_q12_best_latency_s",
-            "planner_q12_sla_latency_s",
-            "planner_q12_sla_cost_usd",
-            "planner_q12_wl_sla_p99_s",
-            "planner_q12_wl_sla_cost_per_query",
-            "planner_multishuffle_single_latency_s",
-            "planner_multishuffle_latency_s",
-            "planner_multishuffle_cost_usd",
-            "planner_multishuffle_dominates",
-        ],
-    },
-    "scan": {
-        "baseline": "benchmarks/baselines/BENCH_scan.json",
-        "refresh_only": "scan_pushdown",
-        "keys": [
-            "scan_body_bytes_row_blob",
-            "scan_body_bytes_pushdown",
-            "scan_bytes_ratio",
-            "scan_row_blob_latency_s",
-            "scan_pushdown_latency_s",
-            "scan_pushdown_cost_usd",
-            "scan_pruned_fraction",
-            "scan_pruned_body_bytes",
-            "scan_width_parity_ok",
-        ],
-    },
-}
+TOLERANCE = 0.15
 
 REFRESH = ("to refresh: PYTHONPATH=src python -m benchmarks.run --quick "
            "--only {only} --json {baseline} && commit the result "
@@ -150,12 +105,10 @@ def main(argv: list[str] | None = None) -> int:
     suite = args.suite
     if suite is None:
         # infer from the rows themselves — temp filenames carry no signal
-        if any(k.startswith("planner_") for k in current):
-            suite = "planner"
-        elif any(k.startswith("scan_") for k in current):
-            suite = "scan"
-        else:
-            suite = "workload"
+        suite = next((s for s, spec in SUITES.items()
+                      if s != "workload" and any(
+                          k.startswith(spec["prefixes"]) for k in current)),
+                     "workload")
     baseline_path = args.baseline or SUITES[suite]["baseline"]
 
     with open(baseline_path) as f:

@@ -1,4 +1,11 @@
-"""Shared benchmark helpers: CSV emission + percentile utilities."""
+"""Shared benchmark helpers: CSV emission, percentile utilities, and the
+single registry of benchmark modules + gated regression suites.
+
+``BENCH_MODULES`` is the one ordered list ``run.py --only`` validates
+against and imports from; ``SUITES`` is the one map
+``check_regression.py`` gates with (baseline path, refresh command,
+key-prefix inference, gated keys). Adding a benchmark or a gate means
+editing THIS file only."""
 from __future__ import annotations
 
 import numpy as np
@@ -6,6 +13,91 @@ import numpy as np
 ROWS: list[str] = []
 RECORDS: list[tuple[str, float, str]] = []   # structured (name, value,
 #                                              derived) for run.py --json
+
+# every benchmark module under benchmarks/, in run order
+BENCH_MODULES = [
+    "parallel_reads", "straggler_cdf", "stragglers", "shuffle_cost",
+    "query_latency", "cost_of_operation", "scalability", "concurrency",
+    "workload", "breakeven", "tunable", "planner", "optimizations",
+    "roofline", "scan_pushdown", "faults",
+]
+
+# gated regression suites (benchmarks/check_regression.py): ``prefixes``
+# drives suite inference from a result file's keys; first match wins and
+# "workload" is the fallback
+SUITES = {
+    "workload": {
+        "baseline": "benchmarks/baselines/BENCH_workload.json",
+        "refresh_only": "workload,breakeven",
+        "prefixes": ("workload_", "fig7_"),
+        "keys": [
+            "fig7_breakeven_threshold_s",
+            "workload_uniform_latency_p50_s",
+            "workload_uniform_latency_p99_s",
+            "workload_poisson_latency_p50_s",
+            "workload_poisson_latency_p99_s",
+            "workload_bursty_latency_p50_s",
+            "workload_bursty_latency_p99_s",
+            "workload_uniform_attr_queue_s_mean",
+            "workload_uniform_attr_visibility_s_mean",
+            "workload_uniform_attr_get_s_mean",
+            "workload_uniform_attr_put_s_mean",
+            "workload_uniform_attr_dup_saved_s_mean",
+        ],
+    },
+    "planner": {
+        "baseline": "benchmarks/baselines/BENCH_planner.json",
+        "refresh_only": "planner",
+        "prefixes": ("planner_",),
+        "keys": [
+            "planner_sim_fraction",
+            "planner_q12_best_latency_s",
+            "planner_q12_sla_latency_s",
+            "planner_q12_sla_cost_usd",
+            "planner_q12_wl_sla_p99_s",
+            "planner_q12_wl_sla_cost_per_query",
+            "planner_multishuffle_single_latency_s",
+            "planner_multishuffle_latency_s",
+            "planner_multishuffle_cost_usd",
+            "planner_multishuffle_dominates",
+        ],
+    },
+    "scan": {
+        "baseline": "benchmarks/baselines/BENCH_scan.json",
+        "refresh_only": "scan_pushdown",
+        "prefixes": ("scan_",),
+        "keys": [
+            "scan_body_bytes_row_blob",
+            "scan_body_bytes_pushdown",
+            "scan_bytes_ratio",
+            "scan_row_blob_latency_s",
+            "scan_pushdown_latency_s",
+            "scan_pushdown_cost_usd",
+            "scan_pruned_fraction",
+            "scan_pruned_body_bytes",
+            "scan_width_parity_ok",
+        ],
+    },
+    "faults": {
+        "baseline": "benchmarks/baselines/BENCH_faults.json",
+        "refresh_only": "faults",
+        "prefixes": ("faults_",),
+        "keys": [
+            "faults_p999_r0_s",
+            "faults_p999_r2_s",
+            "faults_p999_r5_s",
+            "faults_cost_overhead_r5",
+            "faults_width_parity_ok",
+            "faults_cold_wave_starts",
+            "faults_cold_warm_starts",
+            "faults_cold_expired_starts",
+            "faults_journal_resume_ok",
+            "faults_retry_cost_ratio",
+            "faults_retry_p99_ratio",
+            "faults_retry_budget_pick",
+        ],
+    },
+}
 
 
 def emit(name: str, value: float, derived: str = ""):

@@ -1,0 +1,262 @@
+"""Fault & cold-start suite (ISSUE 7, paper §3): what injected failures
+cost, and why the in-place retry path is the right default.
+
+Four sections, all on the stragglers-style micro scan (one scan stage
+over a ~256KB split, outputs billed at the paper's 100MB class):
+
+  A. failure-rate curve — p99.9 task latency and query cost overhead at
+     injected rates r in {0, 0.02, 0.05} (invoke r, worker-loss r/2,
+     GET r/2), plus width-{1,8} bit-parity of the faulted run;
+  B. warm-pool cold starts — a burst pays one cold start per slot, a
+     prompt second query runs fully warm, and a long-idle one pays the
+     whole wave again after keep-alive expiry;
+  C. journaled failover — kill the coordinator mid-query (40% of its
+     event pops), fail over onto a *different executor width*, and
+     check the resumed run's cost/latency/journal CRC are bit-identical
+     to an uninterrupted reference;
+  D. retry budget vs naive re-run — trials of run-until-success with
+     budget 1 + whole-query reruns vs the budget-4 in-place retry path:
+     the retry path must win on both mean cost and p99 latency; the
+     calibrated planner model must likewise never pick budget 1.
+
+Gated keys: benchmarks/common.py SUITES["faults"]; baseline refresh:
+PYTHONPATH=src python -m benchmarks.run --quick --only faults \
+    --json benchmarks/baselines/BENCH_faults.json
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, pct
+from repro.core.coordinator import Coordinator
+from repro.core.stragglers import RSMPolicy, StragglerConfig, WSMPolicy
+from repro.faults import (ColdStartConfig, FaultConfig, Journal,
+                          RetryPolicy, run_with_failover)
+from repro.objectstore.store import ObjectStore, StoreConfig
+from repro.planner.model import PlanConfig, QueryModel
+from repro.relational.table import Table, serialize_table
+
+N_CURVE = 4000            # tasks per failure-rate point (quick: 1200)
+READ_ROWS = 32_000        # one float64 column -> ~256KB split
+WRITE_B = 100 * 1024 * 1024
+NAIVE_CAP = 12            # whole-query rerun attempts before giving up
+
+
+def _policy() -> StragglerConfig:
+    """No §5 mitigations: the tails here must come from the injected
+    faults alone, not from RSM/WSM/backups racing them."""
+    return StragglerConfig(rsm=RSMPolicy(enabled=False),
+                           wsm=WSMPolicy(enabled=False),
+                           doublewrite=False, parallel_reads=16,
+                           pipelining=False, backup_tasks=False)
+
+
+def _store(seed: int = 0) -> ObjectStore:
+    store = ObjectStore(StoreConfig(seed=seed, time_scale=0.0,
+                                    simulate_visibility_lag=False))
+    store.put("base/micro/p0", serialize_table(
+        Table({"x": np.arange(READ_ROWS, dtype=np.float64)})))
+    return store
+
+
+SPLITS = {"micro": ["base/micro/p0"]}
+
+
+def _plan(n_tasks: int, tag: str) -> dict:
+    # NOTE: the plan name keys the per-request AND per-fault RNGs — it
+    # must not encode anything (like executor width) the run should be
+    # invariant to, and distinct tags draw independent fault outcomes
+    return {"name": f"micro_{tag}",
+            "stages": [{"name": "scan", "kind": "scan", "table": "micro",
+                        "tasks": n_tasks, "deps": [],
+                        "out_bytes_floor": WRITE_B}]}
+
+
+def _coord(store, *, seed=0, width=8, max_parallel, faults=None,
+           coldstart=None, retry=None, journal=None) -> Coordinator:
+    return Coordinator(store, SPLITS, _policy(), seed=seed,
+                       max_parallel=max_parallel, compute_scale=0.0,
+                       executor_workers=width, record_events=True,
+                       faults=faults, coldstart=coldstart, retry=retry,
+                       journal=journal)
+
+
+def _task_durs(coord) -> np.ndarray:
+    """Per-task completion time (the micro plan starts every task at
+    t0, so completion == latency): last request done per task index,
+    across all attempts — retries land in the tail."""
+    done: dict[int, float] = {}
+    for (t, name, _q, _s, tidx, _rq, _info) in coord.event_log:
+        if name in ("GET_DONE", "PUT_DONE"):
+            done[tidx] = max(done.get(tidx, 0.0), t)
+    return np.asarray(sorted(done.values()))
+
+
+def _curve_point(n: int, rate: float, *, width: int = 8):
+    # PUT failures dominate the injected tail: a failed 100MB PUT runs to
+    # its would-be completion before the connection dies, then redraws
+    faults = FaultConfig(invoke_fail_rate=rate, worker_loss_rate=rate / 2,
+                         get_fail_rate=rate / 2, put_fail_rate=rate) \
+        if rate else None
+    coord = _coord(_store(), width=width, max_parallel=n, faults=faults,
+                   retry=RetryPolicy(max_attempts=6))
+    # one plan name for every rate point: the request-latency draws are
+    # identical across points (coupled), so the curve isolates the faults
+    res = coord.run_query(_plan(n, "curve"))
+    assert not res.failed, f"rate {rate} exhausted a 6-attempt budget"
+    return coord, res
+
+
+def _sig(coord, res):
+    return (res.latency_s, res.cost.invocations, res.cost.gets,
+            res.cost.puts, res.retries, res.failed,
+            tuple(np.sort(_task_durs(coord))))
+
+
+def _failure_rate_curve(n: int):
+    points = {}
+    for rate in (0.0, 0.02, 0.05):
+        coord, res = _curve_point(n, rate)
+        points[rate] = (coord, res, pct(_task_durs(coord), 99.9))
+
+    p0, p2, p5 = (points[r][2] for r in (0.0, 0.02, 0.05))
+    emit("faults_p999_r0_s", p0, f"task p99.9, no faults, {n} tasks")
+    emit("faults_p999_r2_s", p2, "task p99.9 at 2% injected failures")
+    emit("faults_p999_r5_s", p5, "task p99.9 at 5% injected failures")
+    assert p0 < p2 < p5, "injected failures must thicken the task tail"
+
+    cost0, cost5 = points[0.0][1].cost.total, points[0.05][1].cost.total
+    emit("faults_cost_overhead_r5", cost5 / cost0,
+         "billed cost ratio, 5% failures vs none (retries re-bill)")
+    assert cost5 > cost0, "retries must show up in the bill"
+
+    c1, r1 = _curve_point(n, 0.05, width=1)
+    assert _sig(c1, r1) == _sig(*points[0.05][:2]), \
+        "faulted run differs across executor widths {1, 8}"
+    emit("faults_width_parity_ok", 1.0,
+         f"widths 1 and 8 bit-identical at 5% faults over {n} tasks")
+
+
+def _cold_start_waves():
+    n, par = 128, 32
+    coord = _coord(_store(), max_parallel=par,
+                   coldstart=ColdStartConfig(keepalive_s=300.0))
+    r_a, r_b = coord.run_queries([_plan(n, "cw_a"), _plan(n, "cw_b")],
+                                 arrival_times=[0.0, 30.0])
+    emit("faults_cold_wave_starts", r_a.cold_starts,
+         f"burst over {par} virgin slots: one cold start per slot")
+    emit("faults_cold_warm_starts", r_b.cold_starts,
+         "query 30s later: every slot still warm (300s keep-alive)")
+    assert r_a.cold_starts == par and r_b.cold_starts == 0
+
+    coord2 = _coord(_store(), max_parallel=par,
+                    coldstart=ColdStartConfig(keepalive_s=10.0))
+    _, r_d = coord2.run_queries([_plan(n, "ce_a"), _plan(n, "ce_b")],
+                                arrival_times=[0.0, 40.0])
+    emit("faults_cold_expired_starts", r_d.cold_starts,
+         "query 40s later with 10s keep-alive: the wave repeats")
+    assert r_d.cold_starts == par
+
+
+def _journal_failover():
+    faults = FaultConfig(invoke_fail_rate=0.15, worker_loss_rate=0.1,
+                         get_fail_rate=0.05, put_fail_rate=0.05)
+    retry = RetryPolicy(max_attempts=8)
+    store = _store()
+    plan = _plan(64, "jf")
+    widths = iter((1, 8))           # kill at width 1, fail over to 8
+
+    def mk(journal):
+        return _coord(store, width=next(widths), max_parallel=64,
+                      faults=faults, retry=retry, journal=journal)
+
+    ref_journal = Journal(checkpoint_every=64)
+    ref = _coord(store, width=8, max_parallel=64, faults=faults,
+                 retry=retry, journal=ref_journal).run_query(plan)
+
+    res, journal = run_with_failover(
+        mk, plan, kill_after=int(ref_journal.count * 0.4),
+        checkpoint_every=64)
+    ok = (journal.count == ref_journal.count
+          and journal.crc == ref_journal.crc
+          and res.cost == ref.cost and res.latency_s == ref.latency_s)
+    assert ok, "failover replay diverged from the uninterrupted run"
+    emit("faults_journal_resume_ok", 1.0,
+         f"killed at pop {int(ref_journal.count * 0.4)} of "
+         f"{ref_journal.count}, resumed at width 8 bit-identically")
+
+
+def _run_to_success(coord, n: int, tag: str):
+    """Client loop: rerun the whole query (fresh fault draws per rerun)
+    until it succeeds; returns (total cost, end-to-end latency)."""
+    cost = lat = 0.0
+    for attempt in range(NAIVE_CAP):
+        res = coord.run_query(_plan(n, f"{tag}a{attempt}"))
+        cost += res.cost.total
+        lat += res.latency_s
+        if not res.failed:
+            break
+    return cost, lat
+
+
+def _retry_vs_naive(trials: int):
+    n = 48
+    faults = FaultConfig(invoke_fail_rate=0.02, worker_loss_rate=0.01,
+                         get_fail_rate=0.01)
+    naive_cost, naive_lat, retry_cost, retry_lat = [], [], [], []
+    for trial in range(trials):
+        store = _store(seed=trial)
+        naive = _coord(store, seed=trial, max_parallel=n, faults=faults,
+                       retry=RetryPolicy(max_attempts=1))
+        c, l = _run_to_success(naive, n, f"nv{trial}")
+        naive_cost.append(c)
+        naive_lat.append(l)
+        budgeted = _coord(store, seed=trial, max_parallel=n, faults=faults,
+                          retry=RetryPolicy(max_attempts=4))
+        c, l = _run_to_success(budgeted, n, f"rt{trial}")
+        retry_cost.append(c)
+        retry_lat.append(l)
+
+    cost_ratio = float(np.mean(naive_cost) / np.mean(retry_cost))
+    p99_ratio = pct(naive_lat, 99) / pct(retry_lat, 99)
+    emit("faults_retry_cost_ratio", cost_ratio,
+         f"naive/retry mean cost over {trials} trials (>1: retry wins)")
+    emit("faults_retry_p99_ratio", p99_ratio,
+         "naive/retry p99 latency (>1: retry wins)")
+    assert cost_ratio > 1.0, \
+        "in-place retries must be cheaper than whole-query reruns"
+    assert p99_ratio > 1.0, \
+        "in-place retries must beat whole-query reruns at the p99"
+
+
+def _planner_pick():
+    probe = _coord(_store(), max_parallel=64,
+                   faults=FaultConfig(invoke_fail_rate=0.06,
+                                      worker_loss_rate=0.03,
+                                      get_fail_rate=0.02),
+                   coldstart=ColdStartConfig(keepalive_s=300.0),
+                   retry=RetryPolicy(max_attempts=8))
+    model, _ = QueryModel.from_probe(
+        probe, lambda ntasks=None, **kw: _plan(64, "probe"))
+    assert model.calib.invoke_fail_rate > 0, "probe must fit fault rates"
+    budgets = (1, 2, 4, 8)
+    costs = {b: model.predict(PlanConfig.make(retry_budget=b)).cost.total
+             for b in budgets}
+    pick = min(budgets, key=lambda b: costs[b])
+    emit("faults_retry_budget_pick", float(pick),
+         "retry budget minimizing predicted cost under ~9% faults")
+    assert pick >= 2, \
+        "a calibrated model must never pick the naive budget-1 plan"
+
+
+def main(quick: bool = False):
+    n = 1200 if quick else N_CURVE
+    _failure_rate_curve(n)
+    _cold_start_waves()
+    _journal_failover()
+    _retry_vs_naive(trials=8 if quick else 16)
+    _planner_pick()
+
+
+if __name__ == "__main__":
+    main()

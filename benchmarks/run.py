@@ -6,8 +6,11 @@ derived) so the perf trajectory can be tracked across commits."""
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import time
+
+from benchmarks.common import BENCH_MODULES
 
 
 def main() -> None:
@@ -20,36 +23,17 @@ def main() -> None:
                          "BENCH_workload.json)")
     args = ap.parse_args()
 
-    from benchmarks import (breakeven, concurrency, cost_of_operation,
-                            optimizations, parallel_reads, planner,
-                            query_latency, roofline, scalability,
-                            scan_pushdown, shuffle_cost, straggler_cdf,
-                            stragglers, tunable, workload)
-    mods = [("parallel_reads", parallel_reads),
-            ("straggler_cdf", straggler_cdf),
-            ("stragglers", stragglers),
-            ("shuffle_cost", shuffle_cost),
-            ("query_latency", query_latency),
-            ("cost_of_operation", cost_of_operation),
-            ("scalability", scalability),
-            ("concurrency", concurrency),
-            ("workload", workload),
-            ("breakeven", breakeven),
-            ("tunable", tunable),
-            ("planner", planner),
-            ("optimizations", optimizations),
-            ("roofline", roofline),
-            ("scan_pushdown", scan_pushdown)]
     only = set(args.only.split(",")) if args.only else None
     if only:
-        unknown = only - {name for name, _ in mods}
+        unknown = only - set(BENCH_MODULES)
         if unknown:
             raise SystemExit(f"unknown benchmark(s): {sorted(unknown)}")
     print("name,us_per_call,derived")
     try:
-        for name, mod in mods:
+        for name in BENCH_MODULES:
             if only and name not in only:
                 continue
+            mod = importlib.import_module(f"benchmarks.{name}")
             t0 = time.time()
             try:
                 mod.main(quick=args.quick)

@@ -37,6 +37,20 @@ Event taxonomy (tie-break priority order at equal virtual times):
   * ``DUP_FIRE`` — a duplicate GET/PUT is issued mid-request: completion
     becomes first-of-two-wins (the loser is cancelled but billed, and
     itemized in ``QueryResult.dup_gets``/``dup_puts``).
+  * ``INVOKE_FAIL`` / ``RETRY_FIRE`` — the §3 fault path (repro.faults):
+    an injected failure (invoke API error, whole-worker loss, dropped
+    GET/PUT) is detected, then retried after an exponential backoff.
+    Worker-loss retries *replay* the recorded timeline without
+    re-executing the worker — §3.2 immutable objects make replays safe
+    (``ObjectStore.verify_replay`` asserts identical bytes). A retry
+    budget (``faults.RetryPolicy.max_attempts``) bounds attempts; an
+    exhausted budget fails the query (``QUERY_FAIL`` in the log,
+    ``QueryResult.failed``). Cold starts (``faults.ColdStartConfig``)
+    ride slot acquisition: a slot claimed after sitting idle past the
+    keep-alive window (or never used) pays a sampled cold extra
+    (``COLD_START`` in the log). With no injector, no cold-start model
+    and no journal, every code path below is bit-identical to the
+    fault-free engine — the subsystem is a strict superset.
 
 Parallel-read lanes (§3.3) are a schedulable per-task resource: each task
 owns a bounded pool of ``StragglerConfig.parallel_reads`` lanes and the
@@ -98,16 +112,20 @@ from repro.core.plan import (combine_name, expand_combiners, infer_pushdown,
                              stage_by_name, validate_plan)
 from repro.core.stragglers import StragglerConfig
 from repro.core.worker import PartInput, TaskResult, Worker
+from repro.faults.coldstart import ColdStartConfig
+from repro.faults.inject import FaultConfig, FaultInjector
+from repro.faults.retry import RetryPolicy
 from repro.objectstore.latency import poll_until_visible, visible_twin
 from repro.objectstore.store import ObjectStore
 from repro.relational.table import Table, decode_object, object_meta
 
 INVOKE_OVERHEAD_S = 0.030            # Lambda invoke + runtime startup
 COLD_STRAGGLER_PROB = 0.01           # slow-worker tail (backup-task target)
+_COLD_SALT = 0xC01D0001              # cold-start RNG key-space salt
 
 # event kinds, in tie-break priority order at equal virtual times
 (_READY, _DONE, _BACKUP, _VISIBLE, _GET_ISSUE, _PUT_ISSUE, _DUP,
- _GET_DONE, _PUT_DONE) = range(9)
+ _GET_DONE, _PUT_DONE, _INVOKE_FAIL, _RETRY) = range(11)
 _EPS = 1e-9
 
 
@@ -138,6 +156,14 @@ class QueryResult:
     # the coordinator disambiguated a re-run as ``name@N`` — pass this to
     # ``Coordinator.event_summary(query=...)`` to scope a probe's fits
     store_name: str = ""
+    # §3 fault path (repro.faults): a query fails when a retry budget is
+    # exhausted; the naive client then re-runs it from scratch. Retries
+    # and cold starts are itemized so their cost/latency overhead is
+    # attributable (the billed requests stay in ``cost``).
+    failed: bool = False
+    fail_reason: str = ""        # "invoke" | "worker_loss" | "get" | "put"
+    retries: int = 0             # RETRY_FIRE count (task + request level)
+    cold_starts: int = 0         # cold invokes (faults.ColdStartConfig)
 
     @property
     def dollars(self) -> float:
@@ -151,7 +177,7 @@ class QueryResult:
 class _Req:
     """One scheduled store request of a task's timeline."""
     __slots__ = ("spec", "put", "end", "done", "issue_t", "polls", "dup",
-                 "target")
+                 "target", "tries")
 
     def __init__(self, spec, put: bool):
         self.spec = spec
@@ -162,6 +188,7 @@ class _Req:
         self.polls = 0
         self.dup = False         # a DUP_FIRE issued a duplicate request
         self.target = None       # key actually read (visibility re-target)
+        self.tries = 0           # failed tries so far (§3 request retries)
 
 
 class _TaskIO:
@@ -194,6 +221,11 @@ class _Task:
     io: _TaskIO | None = None
     backup_cap: float = math.inf   # completion candidate of a §5 duplicate
     backup_dup: float | None = None   # dup duration awaiting billing settle
+    sid: int = -1                # invocation slot id (warm-pool identity)
+    attempt: int = 0             # dispatch attempt index (0 = first)
+    failures: int = 0            # failed attempts so far (backoff level)
+    retrying: bool = False       # awaiting a RETRY_FIRE re-dispatch
+    retry_reason: str = ""       # "invoke" | "worker_loss"
 
 
 class _Stage:
@@ -229,6 +261,9 @@ class _Run:
         self.columns_read = 0
         self.gets = self.puts = self.invocations = self.backups = 0
         self.dup_gets = self.dup_puts = self.poll_gets = 0
+        self.retries = self.cold_starts = 0        # §3 fault path
+        self.failed = False
+        self.fail_reason = ""
         self.task_seconds = 0.0
         self.final_result = None
         self.stage_windows: dict[str, tuple[float, float]] = {}
@@ -258,6 +293,7 @@ class _Ctx:
     outstanding: dict
     pool: ThreadPoolExecutor
     deps_map: dict
+    virgin: set = dataclasses.field(default_factory=set)  # never-used sids
 
 
 class Coordinator:
@@ -265,7 +301,11 @@ class Coordinator:
                  policy: StragglerConfig | None = None, *, seed: int = 0,
                  max_parallel: int = 1000, compute_scale: float = 1.0,
                  executor_workers: int | None = None,
-                 record_events: bool = False):
+                 record_events: bool = False,
+                 faults: FaultInjector | FaultConfig | None = None,
+                 coldstart: ColdStartConfig | None = None,
+                 retry: RetryPolicy | None = None,
+                 journal=None):
         self.store = store
         self.base_splits = base_splits
         self.policy = policy or StragglerConfig()
@@ -274,6 +314,19 @@ class Coordinator:
         self.compute_scale = compute_scale
         self.executor_workers = executor_workers or min(8, os.cpu_count()
                                                         or 1)
+        # §3 fault path (repro.faults): all None/disabled by default, in
+        # which case every scheduling code path is bit-identical to the
+        # fault-free engine (strict-superset contract)
+        if isinstance(faults, FaultConfig):
+            faults = FaultInjector(faults, seed)
+        if faults is not None and not faults.config.enabled:
+            faults = None
+        self.faults = faults
+        if coldstart is not None and not coldstart.enabled:
+            coldstart = None
+        self.coldstart = coldstart
+        self.retry = retry or RetryPolicy()
+        self.journal = journal
         # request-level event log: (t, kind, query, stage, task, req, info)
         self.event_log: list[tuple] | None = [] if record_events else None
         self._small_cache: dict[str, Table] = {}
@@ -443,8 +496,11 @@ class Coordinator:
             runs.append(run)
 
         open_loop = [a for a, dep in zip(arrivals, afters) if dep is None]
-        slots = [min(open_loop)] * self.max_parallel
+        # slot = (free_t, sid); the sid gives each slot a warm-pool identity
+        # without changing which free time is popped (bit-identical multiset)
+        slots = [(min(open_loop), i) for i in range(self.max_parallel)]
         heapq.heapify(slots)
+        virgin = set(range(self.max_parallel)) if self.coldstart else set()
         events: list[tuple] = []        # (t, kind, ridx, sidx, tidx, rq)
         pending: deque[tuple[int, int, int]] = deque()   # tasks w/o a slot
         outstanding: dict = {}                # future -> (run, stage, tidx)
@@ -455,7 +511,7 @@ class Coordinator:
 
         with ThreadPoolExecutor(max_workers=self.executor_workers) as pool:
             ctx = _Ctx(runs, events, slots, pending, outstanding, pool,
-                       deps_map)
+                       deps_map, virgin)
             while events or outstanding:
                 while outstanding and not self._can_pop(events, outstanding):
                     self._await_some(ctx)
@@ -464,16 +520,32 @@ class Coordinator:
                 t, kind, ridx, sidx, tidx, rq = heapq.heappop(events)
                 run, stage = runs[ridx], runs[ridx].stages[sidx]
                 if kind == _READY:
+                    if run.failed:
+                        continue        # §3: an exhausted budget failed it
                     if not stage.dispatched and \
                             not self._deps_resolved(run, stage):
                         # a late-dispatched producer hasn't executed yet;
-                        # wall-clock wait only, virtual state is unchanged
-                        heapq.heappush(events,
-                                       (t, kind, ridx, sidx, tidx, rq))
-                        self._await_some(ctx)
+                        # wall-clock wait only, virtual state is unchanged.
+                        # Defer past the heap top when nothing is in flight
+                        # (a fault-path retry may be what re-runs the dep)
+                        if outstanding:
+                            heapq.heappush(events,
+                                           (t, kind, ridx, sidx, tidx, rq))
+                            self._await_some(ctx)
+                        else:
+                            heapq.heappush(events, (events[0][0] + _EPS,
+                                                    kind, ridx, sidx, tidx,
+                                                    rq))
                         continue
+                    # journal AFTER the re-push guard: re-pops depend on
+                    # wall clock, consumed events are width-invariant
+                    if self.journal is not None:
+                        self.journal.observe((t, kind, ridx, sidx, tidx, rq))
                     self._on_ready(ctx, run, stage, t)
-                elif kind == _DONE:
+                    continue
+                if self.journal is not None:
+                    self.journal.observe((t, kind, ridx, sidx, tidx, rq))
+                if kind == _DONE:
                     self._on_done(ctx, run, stage, tidx, t)
                 elif kind == _BACKUP:
                     self._on_backup(ctx, run, stage, tidx, t)
@@ -484,6 +556,10 @@ class Coordinator:
                     self._on_put_issue(ctx, run, stage, tidx, rq, t)
                 elif kind == _DUP:
                     self._on_dup(ctx, run, stage, tidx, rq, t)
+                elif kind == _INVOKE_FAIL:
+                    self._on_invoke_fail(ctx, run, stage, tidx, rq, t)
+                elif kind == _RETRY:
+                    self._on_retry(ctx, run, stage, tidx, rq, t)
                 else:                   # _GET_DONE / _PUT_DONE
                     self._on_req_done(ctx, run, stage, tidx, rq, t,
                                       is_put=(kind == _PUT_DONE))
@@ -494,14 +570,19 @@ class Coordinator:
     @staticmethod
     def _can_pop(events, outstanding) -> bool:
         """An event may fire only if no unresolved task could still produce
-        an earlier one (all of a task's timeline events are >= its start)."""
+        one at or before it (all of a task's timeline events are >= its
+        start). STRICTLY before the bound: an unresolved task may push an
+        event at exactly its start, and popping across that tie would let
+        wall-clock resolution order pick the tie-winner — the heap's tuple
+        order must, or the failover journal (repro.faults) isn't
+        replayable."""
         if not events:
             return False
         if not outstanding:
             return True
         bound = min(stage.tasks[tidx].start
                     for (_r, stage, tidx) in outstanding.values())
-        return events[0][0] <= bound + _EPS
+        return events[0][0] < bound - _EPS
 
     def _await_some(self, ctx: _Ctx):
         """Block until >=1 real execution finishes; adopt its timeline.
@@ -528,13 +609,92 @@ class Coordinator:
         return all(tk.resolved for dep in stage.st["deps"]
                    for tk in run.by_name[dep].tasks)
 
+    @staticmethod
+    def _claim_slot(ctx: _Ctx, *floors: float):
+        """Pop the earliest-free slot and floor its claim time. Returns
+        ``(t_claim, free_t, sid, virgin)`` — the caller decides whether a
+        container actually launches (a failed invoke keeps the slot
+        virgin, so ``ctx.virgin`` is only mutated at real launches)."""
+        free_t, sid = heapq.heappop(ctx.slots)
+        t_claim = free_t
+        for f in floors:
+            if f > t_claim:
+                t_claim = f
+        return t_claim, free_t, sid, sid in ctx.virgin
+
+    def _invoke_overhead(self, run: _Run, stage: _Stage, tidx: int,
+                         attempt: int, t_claim: float, free_t: float,
+                         virgin: bool, stream: int = 0):
+        """Invoke overhead for a slot claim: ``(overhead_s, cold_extra_s)``.
+        Cold iff the warm-pool model is on and the slot is virgin or sat
+        idle past the keep-alive window; the extra is sampled from an RNG
+        keyed on indices only (width-invariant)."""
+        cs = self.coldstart
+        if cs is None:
+            return INVOKE_OVERHEAD_S, 0.0
+        idle = t_claim - free_t
+        if not virgin and idle <= cs.keepalive_s:
+            return cs.warm_overhead_s, 0.0
+        rng = np.random.default_rng(
+            [self.seed, _COLD_SALT, zlib.crc32(run.name.encode()),
+             stage.sidx, tidx, attempt, stream])
+        extra = cs.sample_cold_s(rng)
+        return cs.warm_overhead_s + extra, extra
+
     def _dispatch(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
-                  start: float):
+                  t_claim: float, free_t: float, sid: int, virgin: bool):
+        """Dispatch (or re-dispatch) one task attempt on a claimed slot.
+
+        The fault path forks here: a failed invoke releases the slot at the
+        error-response time without launching a container; a worker-loss
+        retry *replays* the recorded timeline (fresh ``_TaskIO``) instead of
+        re-submitting the worker — §3.2 immutability makes the replay safe
+        and keeps real execution exactly-once per task."""
         task = stage.tasks[tidx]
+        run.invocations += 1        # every attempt is a billed invoke call
+        inj = self.faults
+        if inj is not None and inj.invoke_fails(run.name, stage.sidx, tidx,
+                                                task.attempt):
+            detect = t_claim + inj.config.fail_detect_s
+            heapq.heappush(ctx.slots, (detect, sid))   # stays virgin
+            task.failures += 1
+            task.retrying = True
+            task.retry_reason = "invoke"
+            self._log(t_claim, "INVOKE_FAIL", run, stage, tidx, -1,
+                      reason="invoke", attempt=task.attempt,
+                      detect=detect)
+            heapq.heappush(ctx.events, (detect, _INVOKE_FAIL, run.ridx,
+                                        stage.sidx, tidx, -1))
+            return
+        ctx.virgin.discard(sid)
+        overhead, cold_extra = self._invoke_overhead(
+            run, stage, tidx, task.attempt, t_claim, free_t, virgin)
+        start = t_claim + overhead
+        if cold_extra > 0.0:
+            run.cold_starts += 1
+            run.attr["cold_s"] = run.attr.get("cold_s", 0.0) + cold_extra
+            self._log(t_claim, "COLD_START", run, stage, tidx, -1,
+                      extra_s=cold_extra, idle_s=t_claim - free_t,
+                      attempt=task.attempt)
         task.start = start
-        task.dispatched = True
-        stage.undispatched -= 1
-        run.attr["invoke_s"] += INVOKE_OVERHEAD_S
+        task.sid = sid
+        task.retrying = False
+        run.attr["invoke_s"] += overhead
+        if task.result is not None:
+            # worker-loss replay: real bytes already moved and the timeline
+            # is known — re-bill the attempt's requests and re-advance a
+            # fresh request state machine from the new start
+            run.gets += task.result.gets
+            run.puts += task.result.puts
+            slow = self._slowdown(self._task_rng(run, stage.sidx, tidx,
+                                                 64 + task.attempt))
+            task.io = _TaskIO(task.result.timeline.phases, slow,
+                              max(self.policy.parallel_reads, 1))
+            self._io_advance(ctx, run, stage, tidx, start)
+            return
+        if not task.dispatched:
+            task.dispatched = True
+            stage.undispatched -= 1
         worker = Worker(self.store, self.policy,
                         self._task_rng(run, stage.sidx, tidx, 0),
                         self.compute_scale)
@@ -547,21 +707,27 @@ class Coordinator:
         while ctx.pending and ctx.slots:
             ridx, sidx, tidx = ctx.pending.popleft()
             run, stage = ctx.runs[ridx], ctx.runs[ridx].stages[sidx]
-            t_slot = max(heapq.heappop(ctx.slots), stage.ready_t, now)
-            run.first_start = min(run.first_start, t_slot)
-            start = t_slot + INVOKE_OVERHEAD_S
-            self._dispatch(ctx, run, stage, tidx, start)
+            if run.failed:
+                continue
+            t_claim, free_t, sid, virgin = self._claim_slot(
+                ctx, stage.ready_t, now)
+            run.first_start = min(run.first_start, t_claim)
+            self._dispatch(ctx, run, stage, tidx, t_claim, free_t, sid,
+                           virgin)
             # the stage's backup timers were armed before this task even
             # started: arm its own straggler timer now (stale-checked at
             # the pop if the task finishes in time)
-            if stage.backup_armed and stage.median > 0:
-                detect = start + self.policy.backup_factor * stage.median
+            task = stage.tasks[tidx]
+            if stage.backup_armed and stage.median > 0 and \
+                    not task.retrying:
+                detect = task.start + self.policy.backup_factor * \
+                    stage.median
                 heapq.heappush(ctx.events,
                                (detect, _BACKUP, ridx, sidx, tidx, -1))
 
     # ------------------------------------------------------- task events
     def _on_ready(self, ctx: _Ctx, run: _Run, stage: _Stage, t: float):
-        if stage.dispatched:
+        if stage.dispatched or run.failed:
             return
         stage.dispatched = True
         stage.ready_t = t
@@ -569,9 +735,10 @@ class Coordinator:
             if not ctx.slots:
                 ctx.pending.append((run.ridx, stage.sidx, ti))
                 continue
-            t_slot = max(heapq.heappop(ctx.slots), t)
-            run.first_start = min(run.first_start, t_slot)
-            self._dispatch(ctx, run, stage, ti, t_slot + INVOKE_OVERHEAD_S)
+            t_claim, free_t, sid, virgin = self._claim_slot(ctx, t)
+            run.first_start = min(run.first_start, t_claim)
+            self._dispatch(ctx, run, stage, ti, t_claim, free_t, sid,
+                           virgin)
 
     def _resolve(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
                  r: TaskResult):
@@ -583,7 +750,6 @@ class Coordinator:
         run.keys[stage.st["name"]][tidx] = r.key
         run.outcols[stage.st["name"]][tidx] = r.out_ncols
         run.columns_read += r.columns_read
-        run.invocations += 1
         run.gets += r.gets
         run.puts += r.puts
         if r.result is not None:
@@ -603,7 +769,7 @@ class Coordinator:
         if task.io_done:
             # the slot stays busy for the ORIGINAL duration even when a
             # backup duplicate finished the task's work earlier
-            heapq.heappush(ctx.slots, task.start + task.dur)
+            heapq.heappush(ctx.slots, (task.start + task.dur, task.sid))
             self._drain_pending(ctx, t)
         # else: a mid-flight backup duplicate won; the slot is released
         # (and billing settled) when the original's timeline completes
@@ -635,7 +801,7 @@ class Coordinator:
                 for ti, tk in enumerate(stage.tasks):
                     detect = tk.start + pol.backup_factor * stage.median
                     if tk.dispatched and not tk.done and \
-                            tk.end > detect + _EPS:
+                            not tk.retrying and tk.end > detect + _EPS:
                         heapq.heappush(ctx.events,
                                        (detect, _BACKUP, run.ridx,
                                         stage.sidx, ti, -1))
@@ -669,15 +835,27 @@ class Coordinator:
         settled) at the original's timeline completion.
         """
         task = stage.tasks[tidx]
-        if task.done or task.end <= t + _EPS:
+        if task.done or task.retrying or run.failed or \
+                task.end <= t + _EPS:
             return
         if not ctx.slots:
             return                          # at the invocation limit
         dup = stage.median * self._slowdown(
             self._task_rng(run, stage.sidx, tidx, 2))
-        start = max(heapq.heappop(ctx.slots), t) + INVOKE_OVERHEAD_S
-        heapq.heappush(ctx.slots, start + dup)
-        run.attr["invoke_s"] += INVOKE_OVERHEAD_S
+        t_claim, free_t, sid, virgin = self._claim_slot(ctx, t)
+        ctx.virgin.discard(sid)
+        overhead, cold_extra = self._invoke_overhead(
+            run, stage, tidx, task.attempt, t_claim, free_t, virgin,
+            stream=1)
+        if cold_extra > 0.0:
+            run.cold_starts += 1
+            run.attr["cold_s"] = run.attr.get("cold_s", 0.0) + cold_extra
+            self._log(t_claim, "COLD_START", run, stage, tidx, -1,
+                      extra_s=cold_extra, idle_s=t_claim - free_t,
+                      attempt=task.attempt, backup=True)
+        start = t_claim + overhead
+        heapq.heappush(ctx.slots, (start + dup, sid))
+        run.attr["invoke_s"] += overhead
         run.backups += 1
         run.invocations += 1
         run.gets += task.result.gets        # duplicate re-reads its inputs
@@ -756,11 +934,13 @@ class Coordinator:
         spec = req.spec
         if spec.src is not None:
             dep = run.by_name[spec.src[0]].tasks[spec.src[1]]
-            if not dep.done:
+            if not dep.done and not run.failed:
                 run.waiters.setdefault(spec.src, []).append(
                     (stage.sidx, tidx, rq, lane_t))
                 return
-            avail = dep.end
+            # a failed run drains its in-flight timelines without the
+            # producer ever finishing (QUERY_FAIL woke this read)
+            avail = dep.end if dep.done else lane_t
         else:
             avail = spec.avail
         target, lag = visible_twin(spec.key, spec.alt_key,
@@ -782,16 +962,36 @@ class Coordinator:
             heapq.heappush(ctx.events, (tt, _GET_ISSUE, run.ridx,
                                         stage.sidx, tidx, rq))
 
+    @staticmethod
+    def _req_stream(task: _Task, req: _Req) -> int:
+        """RNG stream for a request's current (attempt, try): equals 0 at
+        the fault-free (0, 0) case so the zero-rate path is bit-identical;
+        the §5 duplicate of the same try uses ``stream + 1``."""
+        return task.attempt * 1024 + req.tries * 2
+
     def _on_get_issue(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
                       rq: int, t: float, retargeted: bool = False):
-        io = stage.tasks[tidx].io
+        task = stage.tasks[tidx]
+        io = task.io
         req = io.reqs[rq]
         req.issue_t = t
-        rng = self._req_rng(run, stage.sidx, tidx, rq, 0)
+        stream = self._req_stream(task, req)
+        rng = self._req_rng(run, stage.sidx, tidx, rq, stream)
         # io.conc lanes share the invocation's NIC: past the Fig-3
         # saturation point the streaming term slows to the fair share
         t1 = self.store.config.get_model.sample(req.spec.nbytes, rng,
                                                 io.conc) * io.slow
+        inj = self.faults
+        if inj is not None and inj.request_fails(
+                run.name, stage.sidx, tidx, rq, task.attempt, req.tries,
+                put=False):
+            # the connection dies at the try's would-be completion time
+            self._log(t, "GET_ISSUE", run, stage, tidx, rq, key=req.target,
+                      nbytes=req.spec.nbytes, conc=io.conc,
+                      retargeted=retargeted, failed=True, tries=req.tries)
+            heapq.heappush(ctx.events, (t + t1, _INVOKE_FAIL, run.ridx,
+                                        stage.sidx, tidx, rq))
+            return
         req.end = t + t1
         pol = self.policy.rsm
         if pol.enabled:
@@ -807,15 +1007,27 @@ class Coordinator:
 
     def _on_put_issue(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
                       rq: int, t: float):
-        io = stage.tasks[tidx].io
+        task = stage.tasks[tidx]
+        io = task.io
         req = io.reqs[rq]
         req.issue_t = t
-        rng = self._req_rng(run, stage.sidx, tidx, rq, 0)
+        stream = self._req_stream(task, req)
+        rng = self._req_rng(run, stage.sidx, tidx, rq, stream)
         send1, post1 = self.store.config.put_model.sample_phases(
             req.spec.nbytes, rng)
         send1 *= io.slow
         post1 *= io.slow
         t1 = send1 + post1
+        inj = self.faults
+        if inj is not None and inj.request_fails(
+                run.name, stage.sidx, tidx, rq, task.attempt, req.tries,
+                put=True):
+            self._log(t, "PUT_ISSUE", run, stage, tidx, rq,
+                      key=req.spec.key, nbytes=req.spec.nbytes,
+                      failed=True, tries=req.tries)
+            heapq.heappush(ctx.events, (t + t1, _INVOKE_FAIL, run.ridx,
+                                        stage.sidx, tidx, rq))
+            return
         req.end = t + t1
         pol = self.policy.wsm
         if pol.enabled:
@@ -833,11 +1045,15 @@ class Coordinator:
         """DUP_FIRE: the §5 per-request timer expired — issue a duplicate
         GET/PUT mid-request; completion is first-of-two-wins and the loser
         is cancelled but billed (itemized in dup_gets/dup_puts)."""
-        io = stage.tasks[tidx].io
+        task = stage.tasks[tidx]
+        io = task.io
+        if io is None:
+            return                  # attempt discarded (§3 worker loss)
         req = io.reqs[rq]
         if req.done or req.end <= t + _EPS:
             return                          # completed before the timer
-        rng = self._req_rng(run, stage.sidx, tidx, rq, 1)
+        rng = self._req_rng(run, stage.sidx, tidx, rq,
+                            self._req_stream(task, req) + 1)
         if req.put:
             send2, post2 = self.store.config.put_model.sample_phases(
                 req.spec.nbytes, rng)
@@ -864,6 +1080,8 @@ class Coordinator:
     def _on_req_done(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
                      rq: int, t: float, is_put: bool):
         io = stage.tasks[tidx].io
+        if io is None:
+            return                  # attempt discarded (§3 worker loss)
         req = io.reqs[rq]
         if req.done or abs(t - req.end) > _EPS:
             return                          # superseded by the duplicate
@@ -896,11 +1114,18 @@ class Coordinator:
             # the losing writer's conditional PUT
             run.task_seconds += min(task.backup_dup, task.dur)
             task.backup_dup = None
+        inj = self.faults
+        if inj is not None and inj.worker_lost(run.name, stage.sidx, tidx,
+                                               task.attempt):
+            # the worker dies before its final conditional PUT lands: the
+            # whole attempt is billed (above) but produced nothing
+            self._on_worker_lost(ctx, run, stage, tidx, t)
+            return
         if task.done:
             # a backup duplicate already finished this task (its DONE
             # popped at backup_cap); release the slot now that the
             # original's full duration is known
-            heapq.heappush(ctx.slots, task.start + task.dur)
+            heapq.heappush(ctx.slots, (task.start + task.dur, task.sid))
             self._drain_pending(ctx, t)
             return
         end = min(t, task.backup_cap)
@@ -908,6 +1133,146 @@ class Coordinator:
         run.ends[stage.st["name"]][tidx] = end
         heapq.heappush(ctx.events,
                        (end, _DONE, run.ridx, stage.sidx, tidx, -1))
+
+    # ------------------------------------------------------- fault events
+    def _on_worker_lost(self, ctx: _Ctx, run: _Run, stage: _Stage,
+                        tidx: int, t: float):
+        """An attempt's worker died pre-final-PUT. If a §5 backup duplicate
+        is racing (or already won), its conditional PUT rescues the task and
+        no retry is needed; otherwise the task re-dispatches as a timeline
+        replay after backoff — or fails the query on an exhausted budget."""
+        task = stage.tasks[tidx]
+        rescued = task.done or task.backup_cap < math.inf
+        self._log(t, "INVOKE_FAIL", run, stage, tidx, -1,
+                  reason="worker_loss", attempt=task.attempt,
+                  rescued=rescued)
+        if rescued:
+            if task.done:
+                # DONE already popped at the duplicate's completion;
+                # release the original's slot now that its dur is known
+                heapq.heappush(ctx.slots,
+                               (task.start + task.dur, task.sid))
+                self._drain_pending(ctx, t)
+            # else: _on_done pops at backup_cap and releases the slot
+            return
+        heapq.heappush(ctx.slots, (t, task.sid))
+        self._drain_pending(ctx, t)
+        if run.failed:
+            return
+        task.failures += 1
+        task.retrying = True
+        task.retry_reason = "worker_loss"
+        task.io = None
+        task.io_done = False
+        task.end = math.inf
+        if task.failures >= self.retry.max_attempts:
+            self._fail_run(ctx, run, stage, tidx, t, "worker_loss")
+            return
+        back = self.retry.backoff_s(task.failures)
+        run.attr["retry_s"] = run.attr.get("retry_s", 0.0) + back
+        heapq.heappush(ctx.events, (t + back, _RETRY, run.ridx,
+                                    stage.sidx, tidx, -1))
+
+    def _on_invoke_fail(self, ctx: _Ctx, run: _Run, stage: _Stage,
+                        tidx: int, rq: int, t: float):
+        """INVOKE_FAIL detected: a failed invoke API call (``rq == -1``,
+        logged at dispatch) or a dropped GET/PUT (``rq >= 0``). Schedule the
+        retry, or fail the query when the budget is exhausted."""
+        task = stage.tasks[tidx]
+        if run.failed:
+            self._abandon_req(ctx, run, stage, tidx, rq, t)
+            return
+        if rq >= 0:
+            req = task.io.reqs[rq]
+            req.tries += 1
+            kind = "put" if req.put else "get"
+            self._log(t, "INVOKE_FAIL", run, stage, tidx, rq, reason=kind,
+                      tries=req.tries, attempt=task.attempt)
+            run.attr["retry_s"] = run.attr.get("retry_s", 0.0) + \
+                (t - req.issue_t)
+            if req.tries >= self.retry.max_attempts:
+                self._fail_run(ctx, run, stage, tidx, t, kind)
+                self._abandon_req(ctx, run, stage, tidx, rq, t)
+                return
+            back = self.retry.backoff_s(req.tries)
+            run.attr["retry_s"] = run.attr.get("retry_s", 0.0) + back
+            heapq.heappush(ctx.events, (t + back, _RETRY, run.ridx,
+                                        stage.sidx, tidx, rq))
+            return
+        # rq == -1: the invoke API call itself failed (detected now)
+        if task.failures >= self.retry.max_attempts:
+            self._fail_run(ctx, run, stage, tidx, t, "invoke")
+            return
+        back = self.retry.backoff_s(task.failures)
+        run.attr["retry_s"] = run.attr.get("retry_s", 0.0) + back
+        heapq.heappush(ctx.events, (t + back, _RETRY, run.ridx,
+                                    stage.sidx, tidx, -1))
+
+    def _on_retry(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                  rq: int, t: float):
+        """RETRY_FIRE: the backoff elapsed — re-issue the failed unit of
+        work (one request, or a whole task attempt)."""
+        if run.failed:
+            self._abandon_req(ctx, run, stage, tidx, rq, t)
+            return
+        task = stage.tasks[tidx]
+        run.retries += 1
+        if rq >= 0:
+            # retry one request on its existing lane; each extra try is a
+            # billed store request
+            req = task.io.reqs[rq]
+            self._log(t, "RETRY_FIRE", run, stage, tidx, rq,
+                      kind="put" if req.put else "get", tries=req.tries)
+            if req.put:
+                run.puts += 1
+                self._on_put_issue(ctx, run, stage, tidx, rq, t)
+            else:
+                run.gets += 1
+                self._on_get_issue(ctx, run, stage, tidx, rq, t)
+            return
+        # whole-task re-dispatch (failed invoke, or worker-loss replay)
+        self._log(t, "RETRY_FIRE", run, stage, tidx, -1,
+                  reason=task.retry_reason, attempt=task.attempt + 1)
+        task.attempt += 1
+        if not ctx.slots:
+            ctx.pending.append((run.ridx, stage.sidx, tidx))
+            return
+        t_claim, free_t, sid, virgin = self._claim_slot(ctx, t)
+        self._dispatch(ctx, run, stage, tidx, t_claim, free_t, sid, virgin)
+
+    def _abandon_req(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                     rq: int, t: float):
+        """A failed query abandons a request mid-retry: complete it now so
+        the holding task's timeline drains and its slot is released."""
+        if rq < 0:
+            return                  # invoke-level: the slot was never held
+        io = stage.tasks[tidx].io
+        if io is None or io.reqs[rq].done:
+            return
+        io.reqs[rq].end = t
+        self._on_req_done(ctx, run, stage, tidx, rq, t,
+                          is_put=io.reqs[rq].put)
+
+    def _fail_run(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
+                  t: float, reason: str):
+        """A retry budget is exhausted: fail the query (§3). In-flight
+        timelines drain (parked reads are woken so their tasks complete and
+        release slots), no new stage dispatches, and closed-loop dependents
+        still activate — a failed query's client re-submits, it does not
+        wedge the stream."""
+        if run.failed:
+            return
+        run.failed = True
+        run.fail_reason = reason
+        run.finish_t = t
+        self._log(t, "QUERY_FAIL", run, stage, tidx, -1, reason=reason,
+                  failures=stage.tasks[tidx].failures)
+        for src in list(run.waiters):
+            for (csidx, ctidx, rq, lane_t) in run.waiters.pop(src, []):
+                self._io_place_get(ctx, run, run.stages[csidx], ctidx, rq,
+                                   max(lane_t, t))
+        for di, think in ctx.deps_map.get(run.ridx, ()):
+            self._activate(ctx.runs[di], run.finish_t + think, ctx.events)
 
     # ------------------------------------------------------- completions
     def _finish_stage(self, run: _Run, stage: _Stage):
@@ -921,6 +1286,8 @@ class Coordinator:
                          now: float):
         """Push STAGE_READY for consumers whose pipelining quota (§4.4) is
         now met by every dependency."""
+        if run.failed:
+            return              # §3: no new stages for a failed query
         frac = self.policy.pipeline_fraction if self.policy.pipelining \
             else 1.0
         for cons in run.consumers_of(producer):
@@ -953,7 +1320,9 @@ class Coordinator:
              for k, (a, b) in run.stage_windows.items()},
             run.task_seconds, run.t0, queue_delay, run.backup_slot_s,
             run.dup_gets, run.dup_puts, run.poll_gets, run.columns_read,
-            {"queue_s": queue_delay, **run.attr}, run.name)
+            {"queue_s": queue_delay, **run.attr}, run.name,
+            failed=run.failed, fail_reason=run.fail_reason,
+            retries=run.retries, cold_starts=run.cold_starts)
 
     # ------------------------------------------------- calibration hooks
     def event_summary(self, query: str | None = None) -> dict:
@@ -970,12 +1339,27 @@ class Coordinator:
         ``put_bytes`` (modeled request sizes), ``out_bytes`` (primary PUT
         payloads, doublewrite twins excluded), ``get_s``/``put_s``
         (issue->completion seconds), ``compute_s``, ``polls``,
-        ``dup_gets``/``dup_puts``, and ``task_durs`` (per-task first-event
-        -> last-event spans, the straggler-spread input).
+        ``dup_gets``/``dup_puts``, ``retries``/``invoke_fails``/
+        ``cold_starts`` (§3 fault-path counters), and ``task_durs``
+        (per-task first-event -> last-event spans, the straggler-spread
+        input).
+
+        §3 fault aggregates (zero with no injector): ``invoke_fails``/
+        ``worker_losses``/``get_fails``/``put_fails`` (INVOKE_FAIL events
+        by reason), ``retries`` (RETRY_FIRE count), ``task_retries``
+        (task-level re-dispatches only), ``retry_reasons`` (reason ->
+        count), ``request_tries`` (try index -> issue count — per-attempt
+        counts for calibration), ``cold_starts``/``cold_s`` (COLD_START
+        count and summed extra), ``query_fails``.
         """
         gets: list[tuple[int, float]] = []
         puts: list[tuple[int, float]] = []
         get_issues = put_issues = dup_gets = dup_puts = polls = 0
+        invoke_fails = worker_losses = get_fails = put_fails = 0
+        retries = task_retries = cold_starts = query_fails = 0
+        cold_s = 0.0
+        retry_reasons: dict[str, int] = {}
+        request_tries: dict[int, int] = {}
         stages: dict[tuple[str, str], dict] = {}
         windows: dict[tuple[str, str, int], list[float]] = {}
         for (t, kind, q, s, tidx, rq, info) in self.event_log or ():
@@ -985,6 +1369,7 @@ class Coordinator:
                 "gets": 0, "get_bytes": 0, "get_s": 0.0, "puts": 0,
                 "put_bytes": 0, "put_s": 0.0, "out_bytes": 0,
                 "compute_s": 0.0, "polls": 0, "dup_gets": 0, "dup_puts": 0,
+                "retries": 0, "invoke_fails": 0, "cold_starts": 0,
                 "tasks": 0})
             if tidx >= 0:
                 w = windows.setdefault((q, s, tidx), [t, t])
@@ -1005,8 +1390,12 @@ class Coordinator:
                 st["compute_s"] += info["seconds"]
             elif kind == "GET_ISSUE":
                 get_issues += 1
+                tries = info.get("tries", 0)
+                request_tries[tries] = request_tries.get(tries, 0) + 1
             elif kind == "PUT_ISSUE":
                 put_issues += 1
+                tries = info.get("tries", 0)
+                request_tries[tries] = request_tries.get(tries, 0) + 1
             elif kind == "VISIBLE_AT":
                 st["polls"] += info["polls"]
                 polls += info["polls"]
@@ -1017,6 +1406,30 @@ class Coordinator:
                 else:
                     st["dup_puts"] += 1
                     dup_puts += 1
+            elif kind == "INVOKE_FAIL":
+                st["invoke_fails"] += 1
+                reason = info["reason"]
+                if reason == "invoke":
+                    invoke_fails += 1
+                elif reason == "worker_loss":
+                    worker_losses += 1
+                elif reason == "get":
+                    get_fails += 1
+                else:
+                    put_fails += 1
+            elif kind == "RETRY_FIRE":
+                st["retries"] += 1
+                retries += 1
+                reason = info.get("reason") or info.get("kind", "")
+                retry_reasons[reason] = retry_reasons.get(reason, 0) + 1
+                if rq < 0:
+                    task_retries += 1
+            elif kind == "COLD_START":
+                st["cold_starts"] += 1
+                cold_starts += 1
+                cold_s += info["extra_s"]
+            elif kind == "QUERY_FAIL":
+                query_fails += 1
         for (q, s, tidx), (lo, hi) in windows.items():
             prof = stages[(q, s)]
             prof["tasks"] += 1
@@ -1024,7 +1437,14 @@ class Coordinator:
         return {"get_samples": gets, "put_samples": puts,
                 "get_issues": get_issues, "put_issues": put_issues,
                 "dup_gets": dup_gets, "dup_puts": dup_puts, "polls": polls,
-                "stages": stages}
+                "invoke_fails": invoke_fails,
+                "worker_losses": worker_losses,
+                "get_fails": get_fails, "put_fails": put_fails,
+                "retries": retries, "task_retries": task_retries,
+                "retry_reasons": retry_reasons,
+                "request_tries": request_tries,
+                "cold_starts": cold_starts, "cold_s": cold_s,
+                "query_fails": query_fails, "stages": stages}
 
     # ---------------------------------------------------------- task build
     def _build_task(self, run: _Run, st, ti, w: Worker, start):

@@ -48,7 +48,8 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
                 max_parallel: int = 1000, target_bytes: int = 1 << 20,
                 compute_scale: float = 1.0,
                 executor_workers: int | None = None,
-                record_events: bool = False):
+                record_events: bool = False,
+                faults=None, coldstart=None, retry=None, journal=None):
     """(coordinator, tables) over a fresh simulated store.
 
     ``compute_scale=0`` makes virtual latency independent of measured
@@ -61,6 +62,9 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
     ``record_events=True`` keeps the coordinator's request-level event log
     (GET/PUT issue/done, DUP_FIRE, VISIBLE_AT, BACKUP_FIRE) in
     ``coord.event_log`` for the straggler benchmarks and tests.
+    ``faults``/``coldstart``/``retry``/``journal`` configure the §3 fault
+    path (repro.faults); all default off, in which case the engine is
+    bit-identical to the fault-free one.
     """
     tables = generate(sf, seed=seed if data_seed is None else data_seed)
     store = ObjectStore(StoreConfig(seed=seed, time_scale=0.0,
@@ -70,7 +74,9 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
                         max_parallel=max_parallel,
                         compute_scale=compute_scale,
                         executor_workers=executor_workers,
-                        record_events=record_events)
+                        record_events=record_events,
+                        faults=faults, coldstart=coldstart, retry=retry,
+                        journal=journal)
     return coord, tables
 
 

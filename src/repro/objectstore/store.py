@@ -65,6 +65,9 @@ class ObjectStore:
         self._rng_lock = threading.Lock()
         self._rng = np.random.default_rng(self.config.seed)
         self.stats = RequestStats()
+        # §3.2 immutability check for fault-path replays: when armed, an
+        # overwrite must carry byte-identical data (repro.faults.journal)
+        self.verify_replay = False
 
     # -- internals ----------------------------------------------------------
     def _sample(self, fn, *a):
@@ -92,6 +95,11 @@ class ObjectStore:
                 with self.stats.lock:
                     self.stats.puts += 1
                 return False
+            if self.verify_replay and key in self._objects and \
+                    self._objects[key] != bytes(data):
+                raise AssertionError(
+                    f"replay divergence: overwrite of {key!r} with "
+                    "different bytes — §3.2 immutability violated")
             self._objects[key] = bytes(data)
             self._visible_at[key] = now + lag * max(self.config.time_scale,
                                                     1e-9)

@@ -66,6 +66,17 @@ class Calibration:
     probe_rsm: bool          # mitigation state the fits were measured under
     probe_wsm: bool
     from_defaults: bool
+    # §3 fault-path fits (repro.faults): rates observed in the probe's
+    # event log, zero when the probe ran fault-free — in which case every
+    # fault term in the model vanishes and predictions are bit-identical
+    # to the pre-fault planner
+    invoke_fail_rate: float = 0.0    # invoke API failures / task attempt
+    worker_loss_rate: float = 0.0    # worker losses / task attempt
+    get_fail_rate: float = 0.0       # dropped GETs / issued GET
+    put_fail_rate: float = 0.0       # dropped PUTs / issued PUT
+    cold_rate: float = 0.0           # cold starts / task attempt
+    cold_overhead_s: float = 0.0     # mean cold-start extra
+    retry_backoff_s: float = 0.05    # first-retry backoff (RetryPolicy)
 
     def get_tail_s(self, rsm: bool) -> float:
         """Fitted GET surcharge, re-scaled when a candidate config toggles
@@ -135,6 +146,12 @@ def calibrate(summary: dict, *, probe_rsm: bool = True,
     put_fit = _fit_requests(puts, put_default)
     n_get = max(summary.get("get_issues", 0), 1)
     n_put = max(summary.get("put_issues", 0), 1)
+    # §3 fault-path rates: attempts = observed tasks + task-level retries
+    # (every re-dispatch is one more attempt at an invoke / worker run)
+    tasks = sum(prof.get("tasks", 0)
+                for prof in summary.get("stages", {}).values())
+    attempts = max(tasks + summary.get("task_retries", 0), 1)
+    cold_starts = summary.get("cold_starts", 0)
     return Calibration(
         get=get_fit, put=put_fit,
         dup_get_rate=summary.get("dup_gets", 0) / n_get,
@@ -144,4 +161,12 @@ def calibrate(summary: dict, *, probe_rsm: bool = True,
         probe_rsm=probe_rsm, probe_wsm=probe_wsm,
         # ANY un-fitted side means the calibration is partly analytic;
         # per-side provenance is in get.samples / put.samples
-        from_defaults=(get_fit.samples == 0 or put_fit.samples == 0))
+        from_defaults=(get_fit.samples == 0 or put_fit.samples == 0),
+        invoke_fail_rate=min(summary.get("invoke_fails", 0) / attempts,
+                             0.9),
+        worker_loss_rate=min(summary.get("worker_losses", 0) / attempts,
+                             0.9),
+        get_fail_rate=min(summary.get("get_fails", 0) / n_get, 0.9),
+        put_fail_rate=min(summary.get("put_fails", 0) / n_put, 0.9),
+        cold_rate=min(cold_starts / attempts, 1.0),
+        cold_overhead_s=summary.get("cold_s", 0.0) / max(cold_starts, 1))

@@ -101,6 +101,12 @@ class PlanConfig:
     # (GETs are priced per request, transfer is free — so pushdown trades
     # dollars for latency and is a genuine Pareto axis)
     pushdown: bool = True
+    # §3 retry budget (faults.RetryPolicy.max_attempts): attempts allowed
+    # per task/request before the QUERY fails and the client re-runs it
+    # whole. Small budgets are cheap per run but pay the expected-rerun
+    # multiplier under injected faults; the model prices both sides, so
+    # this is a searchable axis (SCALAR_AXES)
+    retry_budget: int = 4
 
     @staticmethod
     def make(ntasks: dict | None = None, **kw) -> "PlanConfig":
@@ -221,7 +227,8 @@ class QueryModel:
             ntasks, parallel_reads=coord.policy.parallel_reads,
             rsm=coord.policy.rsm.enabled, wsm=coord.policy.wsm.enabled,
             backup_tasks=coord.policy.backup_tasks,
-            doublewrite=coord.policy.doublewrite)
+            doublewrite=coord.policy.doublewrite,
+            retry_budget=coord.retry.max_attempts)
         try:
             raw = model.predict(probe_cfg).latency_s
             model.latency_bias = min(max(res.latency_s / raw, 0.2), 5.0) \
@@ -318,6 +325,22 @@ class QueryModel:
         dup_get = calib.dup_get_rate if config.rsm else 0.0
         dup_put = calib.dup_put_rate if config.wsm else 0.0
         n_put_keys = 2 if config.doublewrite else 1
+
+        # §3 fault pricing (every term vanishes at zero fitted rates, so a
+        # fault-free probe prices bit-identically to the pre-fault model).
+        # p_att = P(one task attempt is wasted); a budget of k attempts
+        # yields E[attempts] = (1 - p^k)/(1 - p) (truncated geometric) and
+        # P(task fails outright) = p^k — the whole query then re-runs.
+        k = max(int(config.retry_budget), 1)
+        p_att = min(calib.invoke_fail_rate + calib.worker_loss_rate, 0.95)
+        e_att = (1.0 - p_att ** k) / (1.0 - p_att) if p_att > 0.0 else 1.0
+        get_retry = 1.0 / (1.0 - min(calib.get_fail_rate, 0.9)) \
+            if calib.get_fail_rate > 0.0 else 1.0
+        put_retry = 1.0 / (1.0 - min(calib.put_fail_rate, 0.9)) \
+            if calib.put_fail_rate > 0.0 else 1.0
+        # a lost worker re-runs (and re-bills) its whole timeline
+        work_mult = 1.0 + calib.worker_loss_rate * e_att \
+            if calib.worker_loss_rate > 0.0 else 1.0
 
         finish: dict[str, float] = {}
         spans = []
@@ -445,18 +468,46 @@ class QueryModel:
                 * math.sqrt(2.0 * math.log(T)) if T >= 2 else 0.0
             slot_waves = math.ceil(T / self.max_parallel)
             span = calib.invoke_overhead_s + slot_waves * (span_io + pad)
+            if p_att > 0.0:
+                # the stage's critical path pays ~one extra attempt span
+                # whenever ANY of its T tasks retries
+                span += (1.0 - (1.0 - p_att) ** T) \
+                    * (span_io + calib.retry_backoff_s)
+            if calib.cold_rate > 0.0:
+                span += calib.cold_rate * calib.cold_overhead_s
             ready = max((finish[d] for d in st["deps"]), default=0.0)
             finish[name] = ready + span
             spans.append((name, T, span))
 
             issued_gets = T * n_reads
-            gets += issued_gets * (1.0 + dup_get + calib.polls_per_get) \
+            g = issued_gets * (1.0 + dup_get + calib.polls_per_get) \
                 + T * self._broadcast_gets(st, self.split_bytes)
-            puts += T * n_put_keys * (1.0 + dup_put)
-            invocations += T
-            task_seconds += T * span_io
+            p = T * n_put_keys * (1.0 + dup_put)
+            if get_retry != 1.0:
+                g *= get_retry
+            if put_retry != 1.0:
+                p *= put_retry
+            if work_mult != 1.0:
+                g *= work_mult
+                p *= work_mult
+            gets += g
+            puts += p
+            invocations += T * e_att if p_att > 0.0 else T
+            task_seconds += T * span_io * work_mult if work_mult != 1.0 \
+                else T * span_io
 
+        latency = max(finish.values())
+        if p_att > 0.0:
+            # a task that exhausts its budget fails the WHOLE query; the
+            # naive client re-runs it from scratch (expected-rerun
+            # multiplier on both latency and every billed count)
+            total_tasks = sum(ntasks[st["name"]] for st in plan["stages"])
+            rerun = 1.0 / max((1.0 - p_att ** k) ** total_tasks, 0.05)
+            latency *= rerun
+            invocations *= rerun
+            gets *= rerun
+            puts *= rerun
+            task_seconds *= rerun
         cost = QueryCost(task_seconds * WORKER_MEM_GB, invocations,
                          gets, puts)
-        return Prediction(max(finish.values()) * self.latency_bias, cost,
-                          tuple(spans))
+        return Prediction(latency * self.latency_bias, cost, tuple(spans))

@@ -38,7 +38,7 @@ from repro.relational.tpch import QUERIES
 # PlanConfig fields searchable as whole-config axes (everything except the
 # per-stage ntasks keys, which address into the ntasks mapping instead)
 SCALAR_AXES = ("parallel_reads", "shuffle", "rsm", "wsm", "backup_tasks",
-               "doublewrite", "pushdown")
+               "doublewrite", "pushdown", "retry_budget")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,7 +231,8 @@ class QueryEvaluator:
     def __init__(self, store, base_splits, query, *, seed: int = 0,
                  base_policy=None, max_parallel: int = 1000,
                  executor_workers: int | None = None,
-                 plan_kw: dict | None = None):
+                 plan_kw: dict | None = None,
+                 faults=None, coldstart=None, retry=None):
         from repro.core.stragglers import StragglerConfig
         self.store = store
         self.base_splits = base_splits
@@ -241,16 +242,29 @@ class QueryEvaluator:
         self.max_parallel = max_parallel
         self.executor_workers = executor_workers
         self.plan_kw = dict(plan_kw or {})
+        # §3 fault environment shared by every confirmation (repro.faults):
+        # the config's retry_budget overrides the policy's max_attempts, so
+        # the budget axis is confirmable in the simulator
+        self.faults = faults
+        self.coldstart = coldstart
+        self.retry = retry
         self.cache: dict[PlanConfig, object] = {}
 
     def result(self, config: PlanConfig):
         """Full QueryResult for a config (cached)."""
         if config not in self.cache:
+            retry = self.retry
+            if self.faults is not None or retry is not None:
+                from repro.faults.retry import RetryPolicy
+                retry = dataclasses.replace(
+                    retry or RetryPolicy(),
+                    max_attempts=max(int(config.retry_budget), 1))
             coord = Coordinator(
                 self.store, self.base_splits,
                 config.policy(self.base_policy), seed=self.seed,
                 max_parallel=self.max_parallel, compute_scale=0.0,
-                executor_workers=self.executor_workers)
+                executor_workers=self.executor_workers,
+                faults=self.faults, coldstart=self.coldstart, retry=retry)
             plan = self.builder(config.ntasks_dict or None,
                                 **config.plan_kwargs(self.plan_kw))
             # pushdown is a coordinator-level plan key, not a builder kwarg
@@ -260,4 +274,8 @@ class QueryEvaluator:
 
     def __call__(self, config: PlanConfig) -> tuple[float, float]:
         res = self.result(config)
+        if getattr(res, "failed", False):
+            # an exhausted retry budget: a failed query must never look
+            # cheap or fast to the search
+            return math.inf, math.inf
         return res.latency_s, res.cost.total
