@@ -19,7 +19,7 @@ BENCH_MODULES = [
     "parallel_reads", "straggler_cdf", "stragglers", "shuffle_cost",
     "query_latency", "cost_of_operation", "scalability", "concurrency",
     "workload", "breakeven", "tunable", "planner", "optimizations",
-    "roofline", "scan_pushdown", "faults",
+    "roofline", "scan_pushdown", "faults", "tenancy",
 ]
 
 # gated regression suites (benchmarks/check_regression.py): ``prefixes``
@@ -95,6 +95,28 @@ SUITES = {
             "faults_retry_cost_ratio",
             "faults_retry_p99_ratio",
             "faults_retry_budget_pick",
+        ],
+    },
+    "tenancy": {
+        "baseline": "benchmarks/baselines/BENCH_tenancy.json",
+        "refresh_only": "tenancy",
+        "prefixes": ("tenancy_",),
+        "keys": [
+            "tenancy_fg_p99_shared_s",
+            "tenancy_fg_p99_capped_s",
+            "tenancy_fg_p50_capped_s",
+            "tenancy_quota_max_held",
+            "tenancy_interference_ratio",
+            "tenancy_rejected",
+            "tenancy_width_parity_ok",
+            "tenancy_admit_failure_rate",
+            "tenancy_hybrid_p50_drift",
+            "tenancy_hybrid_p99_drift",
+            "tenancy_hybrid_slot_s_ratio",
+            "tenancy_hybrid_pops_saved",
+            "tenancy_fleet_queries",
+            "tenancy_fleet_makespan_s",
+            "tenancy_fleet_rejected",
         ],
     },
 }

@@ -108,6 +108,7 @@ from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 import numpy as np
 
 from repro.core.cost import WORKER_MEM_GB, QueryCost
+from repro.core.events import EventQueue
 from repro.core.plan import (combine_name, expand_combiners, infer_pushdown,
                              stage_by_name, validate_plan)
 from repro.core.stragglers import StragglerConfig
@@ -115,6 +116,7 @@ from repro.core.worker import PartInput, TaskResult, Worker
 from repro.faults.coldstart import ColdStartConfig
 from repro.faults.inject import FaultConfig, FaultInjector
 from repro.faults.retry import RetryPolicy
+from repro.objectstore.client import RequestTimeline
 from repro.objectstore.latency import poll_until_visible, visible_twin
 from repro.objectstore.store import ObjectStore
 from repro.relational.table import Table, decode_object, object_meta
@@ -123,9 +125,12 @@ INVOKE_OVERHEAD_S = 0.030            # Lambda invoke + runtime startup
 COLD_STRAGGLER_PROB = 0.01           # slow-worker tail (backup-task target)
 _COLD_SALT = 0xC01D0001              # cold-start RNG key-space salt
 
-# event kinds, in tie-break priority order at equal virtual times
+# event kinds, in tie-break priority order at equal virtual times.
+# _ADMIT / _RELEASE exist only on the multi-tenant path (tenants= passed
+# to run_queries): ADMIT is a query arriving at its tenant's admission
+# controller, RELEASE returns a future-free slot to its tenant's quota.
 (_READY, _DONE, _BACKUP, _VISIBLE, _GET_ISSUE, _PUT_ISSUE, _DUP,
- _GET_DONE, _PUT_DONE, _INVOKE_FAIL, _RETRY) = range(11)
+ _GET_DONE, _PUT_DONE, _INVOKE_FAIL, _RETRY, _ADMIT, _RELEASE) = range(13)
 _EPS = 1e-9
 
 
@@ -164,6 +169,11 @@ class QueryResult:
     fail_reason: str = ""        # "invoke" | "worker_loss" | "get" | "put"
     retries: int = 0             # RETRY_FIRE count (task + request level)
     cold_starts: int = 0         # cold invokes (faults.ColdStartConfig)
+    # multi-tenant path (run_queries(tenants=...)): the owning tenant's
+    # name, and whether admission control rejected the query outright
+    # (a rejected query runs nothing, bills nothing, latency 0)
+    tenant: str = ""
+    rejected: bool = False
 
     @property
     def dollars(self) -> float:
@@ -243,6 +253,40 @@ class _Stage:
         self.median = 0.0
 
 
+class _TenantState:
+    """Per-tenant quota/admission accounting for one ``run_queries`` call.
+
+    Built from a duck-typed tenant spec (``workload.tenancy.TenantSpec``
+    or anything with the same attributes) so the core never imports the
+    workload layer. ``held`` counts slots the tenant currently occupies
+    or has reserved (claim until the slot's free time — a backup
+    duplicate's slot counts until its duplicate run ends); ``inflight``
+    counts admitted-but-unfinished queries.
+    """
+    __slots__ = ("name", "slot_quota", "priority", "max_inflight",
+                 "admission", "read_lanes", "held", "max_held", "inflight",
+                 "queue", "rejects")
+
+    def __init__(self, spec):
+        self.name = spec.name
+        self.slot_quota = getattr(spec, "slot_quota", None)
+        self.priority = getattr(spec, "priority", "foreground")
+        self.max_inflight = getattr(spec, "max_inflight", None)
+        self.admission = getattr(spec, "admission", "queue")
+        self.read_lanes = getattr(spec, "read_lanes", None)
+        if self.priority not in ("foreground", "background"):
+            raise ValueError(f"tenant {self.name}: priority "
+                             f"{self.priority!r}")
+        if self.admission not in ("queue", "reject"):
+            raise ValueError(f"tenant {self.name}: admission "
+                             f"{self.admission!r}")
+        self.held = 0          # slots claimed/reserved right now
+        self.max_held = 0      # high-water mark (quota-enforcement proof)
+        self.inflight = 0      # admitted, unfinished queries
+        self.queue: deque[int] = deque()   # ridx waiting for admission
+        self.rejects = 0
+
+
 class _Run:
     """Mutable per-query scheduling state."""
 
@@ -264,6 +308,12 @@ class _Run:
         self.retries = self.cold_starts = 0        # §3 fault path
         self.failed = False
         self.fail_reason = ""
+        self.tenant: _TenantState | None = None
+        self.rejected = False
+        # external arrival time: == t0 except for admission-queued runs,
+        # whose t0 (activation) is later — latency and queue delay are
+        # measured from arrival_t so admission wait counts as queueing
+        self.arrival_t = t0
         self.task_seconds = 0.0
         self.final_result = None
         self.stage_windows: dict[str, tuple[float, float]] = {}
@@ -287,13 +337,17 @@ class _Run:
 class _Ctx:
     """The event loop's shared mutable state, threaded through handlers."""
     runs: list
-    events: list
+    events: EventQueue
     slots: list
     pending: deque
     outstanding: dict
     pool: ThreadPoolExecutor
     deps_map: dict
     virgin: set = dataclasses.field(default_factory=set)  # never-used sids
+    # multi-tenant path: background-priority tasks queue separately and
+    # are drained only after every foreground task got a chance
+    pending_bg: deque = dataclasses.field(default_factory=deque)
+    tenancy: bool = False
 
 
 class Coordinator:
@@ -333,6 +387,11 @@ class Coordinator:
         self._cache_lock = threading.Lock()
         self._name_counts: dict[str, int] = {}
         self._schema_cache: dict[str, dict | None] = {}
+        # introspection from the last run_queries call: total event pops
+        # (the tenancy benchmark's events/sec numerator) and per-tenant
+        # quota/admission state (tests assert max_held <= slot_quota)
+        self.last_event_pops = 0
+        self.tenant_states: dict[str, _TenantState] = {}
 
     # ------------------------------------------------------------ helpers
     def _base_reader(self, worker: Worker):
@@ -439,6 +498,7 @@ class Coordinator:
     def run_queries(self, plans: list[dict],
                     arrival_times: list[float] | None = None,
                     after: list[tuple[int, float] | None] | None = None,
+                    tenants: list | None = None,
                     ) -> list[QueryResult]:
         """Run several queries against ONE shared invocation-slot pool.
 
@@ -453,6 +513,16 @@ class Coordinator:
         cross-wave approximation. ``arrival_times[i]`` is ignored for such
         entries; the realised arrival is reported in
         ``QueryResult.arrival_s``.
+
+        ``tenants[i]`` (optional) attributes query i to a tenant: any
+        object with a ``name`` and optionally ``slot_quota`` (max slots
+        held at once, drawn from this pool), ``max_inflight`` +
+        ``admission`` ("queue" | "reject"), ``priority`` ("foreground" |
+        "background" — background tasks wait until no foreground task is
+        slot-starved), and ``read_lanes`` (caps §3.3 per-task parallel
+        reads). Entries sharing a name share one quota/admission state.
+        With ``tenants=None`` (or all-None) every tenancy code path is
+        skipped and scheduling is bit-identical to earlier engines.
         """
         if not plans:
             return []
@@ -475,6 +545,11 @@ class Coordinator:
             if think < 0:
                 raise ValueError(f"after[{i}]: negative think time {think}")
             deps_map.setdefault(j, []).append((i, float(think)))
+        tenant_list = list(tenants or [None] * len(plans))
+        if len(tenant_list) != len(plans):
+            raise ValueError(f"{len(plans)} plans but {len(tenant_list)} "
+                             "tenant entries")
+        tstates: dict[str, _TenantState] = {}
         runs: list[_Run] = []
         for ridx, (plan, arr) in enumerate(zip(plans, arrivals)):
             if afters[ridx] is not None:
@@ -486,6 +561,11 @@ class Coordinator:
             expanded = self._expand_plan(plan, uname)
             validate_plan(expanded)
             run = _Run(ridx, expanded, plan["name"], arr)
+            spec = tenant_list[ridx]
+            if spec is not None:
+                if spec.name not in tstates:
+                    tstates[spec.name] = _TenantState(spec)
+                run.tenant = tstates[spec.name]
             for stage in run.stages:
                 stage.n = self._ntasks(expanded, stage.st)
                 stage.undispatched = stage.n
@@ -501,23 +581,23 @@ class Coordinator:
         slots = [(min(open_loop), i) for i in range(self.max_parallel)]
         heapq.heapify(slots)
         virgin = set(range(self.max_parallel)) if self.coldstart else set()
-        events: list[tuple] = []        # (t, kind, ridx, sidx, tidx, rq)
+        events = EventQueue()           # (t, kind, ridx, sidx, tidx, rq)
         pending: deque[tuple[int, int, int]] = deque()   # tasks w/o a slot
         outstanding: dict = {}                # future -> (run, stage, tidx)
 
-        for run in runs:
-            if not math.isnan(run.t0):
-                self._activate(run, run.t0, events)
-
         with ThreadPoolExecutor(max_workers=self.executor_workers) as pool:
             ctx = _Ctx(runs, events, slots, pending, outstanding, pool,
-                       deps_map, virgin)
+                       deps_map, virgin, tenancy=bool(tstates))
+            self.tenant_states = tstates
+            for run in runs:
+                if not math.isnan(run.t0):
+                    self._arrive(ctx, run, run.t0)
             while events or outstanding:
                 while outstanding and not self._can_pop(events, outstanding):
                     self._await_some(ctx)
                 if not events:
                     continue
-                t, kind, ridx, sidx, tidx, rq = heapq.heappop(events)
+                t, kind, ridx, sidx, tidx, rq = events.pop()
                 run, stage = runs[ridx], runs[ridx].stages[sidx]
                 if kind == _READY:
                     if run.failed:
@@ -529,13 +609,11 @@ class Coordinator:
                         # Defer past the heap top when nothing is in flight
                         # (a fault-path retry may be what re-runs the dep)
                         if outstanding:
-                            heapq.heappush(events,
-                                           (t, kind, ridx, sidx, tidx, rq))
+                            events.push(t, kind, ridx, sidx, tidx, rq)
                             self._await_some(ctx)
                         else:
-                            heapq.heappush(events, (events[0][0] + _EPS,
-                                                    kind, ridx, sidx, tidx,
-                                                    rq))
+                            events.push(events.peek_t() + _EPS,
+                                        kind, ridx, sidx, tidx, rq)
                         continue
                     # journal AFTER the re-push guard: re-pops depend on
                     # wall clock, consumed events are width-invariant
@@ -560,10 +638,15 @@ class Coordinator:
                     self._on_invoke_fail(ctx, run, stage, tidx, rq, t)
                 elif kind == _RETRY:
                     self._on_retry(ctx, run, stage, tidx, rq, t)
+                elif kind == _ADMIT:
+                    self._on_admit(ctx, run, t)
+                elif kind == _RELEASE:
+                    self._on_release(ctx, run, t)
                 else:                   # _GET_DONE / _PUT_DONE
                     self._on_req_done(ctx, run, stage, tidx, rq, t,
                                       is_put=(kind == _PUT_DONE))
 
+        self.last_event_pops = events.popped
         return [self._finish(run) for run in runs]
 
     # ----------------------------------------------------- loop plumbing
@@ -582,7 +665,7 @@ class Coordinator:
             return True
         bound = min(stage.tasks[tidx].start
                     for (_r, stage, tidx) in outstanding.values())
-        return events[0][0] < bound - _EPS
+        return events.peek_t() < bound - _EPS
 
     def _await_some(self, ctx: _Ctx):
         """Block until >=1 real execution finishes; adopt its timeline.
@@ -594,15 +677,134 @@ class Coordinator:
             self._resolve(ctx, run, stage, tidx, f.result())
 
     @staticmethod
-    def _activate(run: _Run, t0: float, events):
-        """Arm a run's root stages at virtual time t0 (query arrival)."""
+    def _activate(run: _Run, t0: float, events: EventQueue):
+        """Arm a run's root stages at virtual time t0 (query start)."""
         run.t0 = t0
         run.finish_t = t0
+        if math.isnan(run.arrival_t):
+            run.arrival_t = t0
         for stage in run.stages:
             if not stage.st["deps"]:
                 stage.ready_pushed = True
-                heapq.heappush(events,
-                               (t0, _READY, run.ridx, stage.sidx, 0, -1))
+                events.push(t0, _READY, run.ridx, stage.sidx, 0, -1)
+
+    def _arrive(self, ctx: _Ctx, run: _Run, t: float):
+        """A query arrives (open-loop t0 or closed-loop finish+think).
+        Tenant-owned queries route through admission control; everything
+        else activates directly — the pre-tenancy code path, unchanged."""
+        if run.tenant is None:
+            self._activate(run, t, ctx.events)
+            return
+        if math.isnan(run.arrival_t):
+            run.arrival_t = t
+        ctx.events.push(t, _ADMIT, run.ridx, 0, 0, -1)
+
+    # --------------------------------------------------- tenancy events
+    def _on_admit(self, ctx: _Ctx, run: _Run, t: float):
+        """ADMIT: the tenant's admission controller sees the arrival.
+        Under the inflight cap the query starts now; over it, policy
+        "queue" parks it (admitted FIFO as earlier queries finish, the
+        wait counted as queue delay) and "reject" drops it outright."""
+        st = run.tenant
+        if st.max_inflight is None or st.inflight < st.max_inflight:
+            st.inflight += 1
+            self._log(t, "ADMIT", run, run.stages[0], -1, -1,
+                      tenant=st.name, queued=False)
+            self._activate(run, t, ctx.events)
+        elif st.admission == "reject":
+            run.rejected = True
+            run.t0 = t
+            run.arrival_t = t
+            run.finish_t = t
+            st.rejects += 1
+            self._log(t, "ADMIT_REJECT", run, run.stages[0], -1, -1,
+                      tenant=st.name, inflight=st.inflight)
+            # the stream is not wedged: closed-loop dependents still
+            # arrive (the client saw the rejection immediately)
+            for di, think in ctx.deps_map.get(run.ridx, ()):
+                self._arrive(ctx, ctx.runs[di], t + think)
+        else:
+            st.queue.append(run.ridx)
+            self._log(t, "ADMIT_QUEUE", run, run.stages[0], -1, -1,
+                      tenant=st.name, depth=len(st.queue))
+
+    def _on_release(self, ctx: _Ctx, run: _Run, t: float):
+        """RELEASE: a slot reserved by this tenant reached its free time;
+        the quota headroom may unblock queued tasks."""
+        st = run.tenant
+        st.held -= 1
+        self._log(t, "SLOT_RELEASE", run, run.stages[0], -1, -1,
+                  tenant=st.name, held=st.held)
+        self._drain_pending(ctx, t)
+
+    def _query_finished(self, ctx: _Ctx, run: _Run, t: float):
+        """A tenant query finished (or failed): free its inflight token
+        and admit the tenant's longest-waiting queued query, if any."""
+        st = run.tenant
+        if st is None:
+            return
+        st.inflight -= 1
+        while st.queue:
+            nxt = ctx.runs[st.queue.popleft()]
+            if nxt.failed or nxt.rejected:
+                continue
+            st.inflight += 1
+            self._log(t, "ADMIT", nxt, nxt.stages[0], -1, -1,
+                      tenant=st.name, queued=True)
+            self._activate(nxt, t, ctx.events)
+            break
+
+    def _quota_blocked(self, run: _Run) -> bool:
+        st = run.tenant
+        return st is not None and st.slot_quota is not None \
+            and st.held >= st.slot_quota
+
+    def _note_claim(self, run: _Run, stage: _Stage, tidx: int,
+                    t_claim: float, sid: int):
+        st = run.tenant
+        if st is None:
+            return
+        st.held += 1
+        if st.held > st.max_held:
+            st.max_held = st.held
+        self._log(t_claim, "SLOT_CLAIM", run, stage, tidx, -1,
+                  tenant=st.name, sid=sid, held=st.held)
+
+    def _return_slot(self, ctx: _Ctx, run: _Run, free_t: float, sid: int,
+                     now: float):
+        """Return a slot to the shared pool; for tenant runs, also return
+        it to the tenant's quota — at ``free_t``, not at this pop, so a
+        slot pushed back with a future free time (backup duplicates, the
+        invoke-fail error window) stays counted against the quota while
+        it is actually occupied."""
+        heapq.heappush(ctx.slots, (free_t, sid))
+        st = run.tenant
+        if st is None:
+            return
+        if free_t <= now + _EPS:
+            st.held -= 1
+            self._log(now, "SLOT_RELEASE", run, run.stages[0], -1, -1,
+                      tenant=st.name, held=st.held)
+        else:
+            ctx.events.push(free_t, _RELEASE, run.ridx, 0, 0, -1)
+
+    def _task_lanes(self, run: _Run) -> int:
+        """§3.3 parallel-read lanes for one of this run's tasks; a tenant
+        ``read_lanes`` cap throttles I/O concurrency, not just slots."""
+        lanes = self.policy.parallel_reads
+        st = run.tenant
+        if st is not None and st.read_lanes is not None:
+            lanes = min(lanes, st.read_lanes)
+        return max(lanes, 1)
+
+    def _queue_task(self, ctx: _Ctx, run: _Run, sidx: int, tidx: int):
+        """Park a slotless (or quota-blocked) task on the right pending
+        queue: background tenants wait behind every foreground task."""
+        st = run.tenant
+        if st is not None and st.priority == "background":
+            ctx.pending_bg.append((run.ridx, sidx, tidx))
+        else:
+            ctx.pending.append((run.ridx, sidx, tidx))
 
     @staticmethod
     def _deps_resolved(run: _Run, stage: _Stage) -> bool:
@@ -656,15 +858,16 @@ class Coordinator:
         if inj is not None and inj.invoke_fails(run.name, stage.sidx, tidx,
                                                 task.attempt):
             detect = t_claim + inj.config.fail_detect_s
-            heapq.heappush(ctx.slots, (detect, sid))   # stays virgin
+            # slot free at detect, stays virgin
+            self._return_slot(ctx, run, detect, sid, t_claim)
             task.failures += 1
             task.retrying = True
             task.retry_reason = "invoke"
             self._log(t_claim, "INVOKE_FAIL", run, stage, tidx, -1,
                       reason="invoke", attempt=task.attempt,
                       detect=detect)
-            heapq.heappush(ctx.events, (detect, _INVOKE_FAIL, run.ridx,
-                                        stage.sidx, tidx, -1))
+            ctx.events.push(detect, _INVOKE_FAIL, run.ridx,
+                            stage.sidx, tidx, -1)
             return
         ctx.virgin.discard(sid)
         overhead, cold_extra = self._invoke_overhead(
@@ -689,41 +892,77 @@ class Coordinator:
             slow = self._slowdown(self._task_rng(run, stage.sidx, tidx,
                                                  64 + task.attempt))
             task.io = _TaskIO(task.result.timeline.phases, slow,
-                              max(self.policy.parallel_reads, 1))
+                              self._task_lanes(run))
             self._io_advance(ctx, run, stage, tidx, start)
             return
         if not task.dispatched:
             task.dispatched = True
             stage.undispatched -= 1
+        if stage.st["kind"] == "modeled":
+            # hybrid mode (workload.tenancy): no worker runs — the task's
+            # timeline is a single calibrated compute phase, resolved at
+            # this pop. The event loop never blocks on the thread pool for
+            # modeled stages, which is what makes 1000-stream fleets cheap
+            # while the slot claim above still couples into §6.5 contention.
+            self._resolve(ctx, run, stage, tidx,
+                          self._modeled_result(stage.st, tidx))
+            return
         worker = Worker(self.store, self.policy,
                         self._task_rng(run, stage.sidx, tidx, 0),
                         self.compute_scale)
         call = self._build_task(run, stage.st, tidx, worker, start)
         ctx.outstanding[ctx.pool.submit(call)] = (run, stage, tidx)
 
+    def _modeled_result(self, st: dict, tidx: int) -> TaskResult:
+        """Synthetic TaskResult for a "modeled" stage task: a single
+        compute phase of the stage's calibrated per-task duration (the
+        per-task §5 slowdown multiplies it at _io_advance, so modeled
+        stages keep an emergent straggler spread), plus billed request
+        counts apportioned by workload.tenancy's model bank."""
+        def _at(v, default=0):
+            if isinstance(v, (list, tuple)):
+                return v[tidx]
+            return default if v is None else v
+        tl = RequestTimeline()
+        tl.record_compute(float(_at(st.get("task_s"), 0.0)))
+        return TaskResult(key=None, gets=int(_at(st.get("task_gets"))),
+                          puts=int(_at(st.get("task_puts"))),
+                          compute_s=float(_at(st.get("task_s"), 0.0)),
+                          out_bytes=0, timeline=tl)
+
     def _drain_pending(self, ctx: _Ctx, now: float):
-        """Give freed slots to queued tasks, FIFO. Called only at event
-        pops, so assignment order is a function of virtual time alone."""
-        while ctx.pending and ctx.slots:
-            ridx, sidx, tidx = ctx.pending.popleft()
-            run, stage = ctx.runs[ridx], ctx.runs[ridx].stages[sidx]
-            if run.failed:
-                continue
-            t_claim, free_t, sid, virgin = self._claim_slot(
-                ctx, stage.ready_t, now)
-            run.first_start = min(run.first_start, t_claim)
-            self._dispatch(ctx, run, stage, tidx, t_claim, free_t, sid,
-                           virgin)
-            # the stage's backup timers were armed before this task even
-            # started: arm its own straggler timer now (stale-checked at
-            # the pop if the task finishes in time)
-            task = stage.tasks[tidx]
-            if stage.backup_armed and stage.median > 0 and \
-                    not task.retrying:
-                detect = task.start + self.policy.backup_factor * \
-                    stage.median
-                heapq.heappush(ctx.events,
-                               (detect, _BACKUP, ridx, sidx, tidx, -1))
+        """Give freed slots to queued tasks, FIFO — foreground queue
+        first, background tenants only after it is empty. Called only at
+        event pops, so assignment order is a function of virtual time
+        alone. Tasks whose tenant is at its slot quota are skipped in
+        place (order preserved) until a RELEASE restores headroom."""
+        for q in (ctx.pending, ctx.pending_bg):
+            deferred = []
+            while q and ctx.slots:
+                ridx, sidx, tidx = q.popleft()
+                run, stage = ctx.runs[ridx], ctx.runs[ridx].stages[sidx]
+                if run.failed:
+                    continue
+                if self._quota_blocked(run):
+                    deferred.append((ridx, sidx, tidx))
+                    continue
+                t_claim, free_t, sid, virgin = self._claim_slot(
+                    ctx, stage.ready_t, now)
+                self._note_claim(run, stage, tidx, t_claim, sid)
+                run.first_start = min(run.first_start, t_claim)
+                self._dispatch(ctx, run, stage, tidx, t_claim, free_t, sid,
+                               virgin)
+                # the stage's backup timers were armed before this task
+                # even started: arm its own straggler timer now (stale-
+                # checked at the pop if the task finishes in time)
+                task = stage.tasks[tidx]
+                if stage.backup_armed and stage.median > 0 and \
+                        not task.retrying:
+                    detect = task.start + self.policy.backup_factor * \
+                        stage.median
+                    ctx.events.push(detect, _BACKUP, ridx, sidx, tidx, -1)
+            for item in reversed(deferred):
+                q.appendleft(item)
 
     # ------------------------------------------------------- task events
     def _on_ready(self, ctx: _Ctx, run: _Run, stage: _Stage, t: float):
@@ -732,10 +971,11 @@ class Coordinator:
         stage.dispatched = True
         stage.ready_t = t
         for ti in range(stage.n):
-            if not ctx.slots:
-                ctx.pending.append((run.ridx, stage.sidx, ti))
+            if not ctx.slots or self._quota_blocked(run):
+                self._queue_task(ctx, run, stage.sidx, ti)
                 continue
             t_claim, free_t, sid, virgin = self._claim_slot(ctx, t)
+            self._note_claim(run, stage, ti, t_claim, sid)
             run.first_start = min(run.first_start, t_claim)
             self._dispatch(ctx, run, stage, ti, t_claim, free_t, sid,
                            virgin)
@@ -755,8 +995,7 @@ class Coordinator:
         if r.result is not None:
             run.final_result = r.result
         slow = self._slowdown(self._task_rng(run, stage.sidx, tidx, 1))
-        task.io = _TaskIO(r.timeline.phases, slow,
-                          max(self.policy.parallel_reads, 1))
+        task.io = _TaskIO(r.timeline.phases, slow, self._task_lanes(run))
         self._io_advance(ctx, run, stage, tidx, task.start)
 
     def _on_done(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
@@ -769,7 +1008,7 @@ class Coordinator:
         if task.io_done:
             # the slot stays busy for the ORIGINAL duration even when a
             # backup duplicate finished the task's work earlier
-            heapq.heappush(ctx.slots, (task.start + task.dur, task.sid))
+            self._return_slot(ctx, run, task.start + task.dur, task.sid, t)
             self._drain_pending(ctx, t)
         # else: a mid-flight backup duplicate won; the slot is released
         # (and billing settled) when the original's timeline completes
@@ -802,18 +1041,17 @@ class Coordinator:
                     detect = tk.start + pol.backup_factor * stage.median
                     if tk.dispatched and not tk.done and \
                             not tk.retrying and tk.end > detect + _EPS:
-                        heapq.heappush(ctx.events,
-                                       (detect, _BACKUP, run.ridx,
-                                        stage.sidx, ti, -1))
+                        ctx.events.push(detect, _BACKUP, run.ridx,
+                                        stage.sidx, ti, -1)
 
         if stage.done == stage.n:
             self._finish_stage(run, stage)
-            if stage.st is run.plan["stages"][-1] and ctx.deps_map:
+            if stage.st is run.plan["stages"][-1]:
                 # closed-loop streams: the next query in the stream arrives
                 # think_s after this one finishes
                 for di, think in ctx.deps_map.get(run.ridx, ()):
-                    self._activate(ctx.runs[di], run.finish_t + think,
-                                   ctx.events)
+                    self._arrive(ctx, ctx.runs[di], run.finish_t + think)
+                self._query_finished(ctx, run, t)
         self._check_consumers(run, stage.st["name"], ctx.events, t)
 
     def _on_backup(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
@@ -840,9 +1078,12 @@ class Coordinator:
             return
         if not ctx.slots:
             return                          # at the invocation limit
+        if self._quota_blocked(run):
+            return      # §6.5: mitigation never bursts past the quota
         dup = stage.median * self._slowdown(
             self._task_rng(run, stage.sidx, tidx, 2))
         t_claim, free_t, sid, virgin = self._claim_slot(ctx, t)
+        self._note_claim(run, stage, tidx, t_claim, sid)
         ctx.virgin.discard(sid)
         overhead, cold_extra = self._invoke_overhead(
             run, stage, tidx, task.attempt, t_claim, free_t, virgin,
@@ -854,7 +1095,7 @@ class Coordinator:
                       extra_s=cold_extra, idle_s=t_claim - free_t,
                       attempt=task.attempt, backup=True)
         start = t_claim + overhead
-        heapq.heappush(ctx.slots, (start + dup, sid))
+        self._return_slot(ctx, run, start + dup, sid, t)
         run.attr["invoke_s"] += overhead
         run.backups += 1
         run.invocations += 1
@@ -869,8 +1110,8 @@ class Coordinator:
             if cand < task.end - _EPS:
                 task.end = cand             # original DONE event goes stale
                 run.ends[stage.st["name"]][tidx] = cand
-                heapq.heappush(ctx.events, (cand, _DONE, run.ridx,
-                                            stage.sidx, tidx, -1))
+                ctx.events.push(cand, _DONE, run.ridx,
+                                stage.sidx, tidx, -1)
         else:
             # the original's duration is not known yet: remember the
             # duplicate and settle at timeline completion
@@ -879,8 +1120,8 @@ class Coordinator:
                 task.backup_cap = cand
                 task.end = cand
                 run.ends[stage.st["name"]][tidx] = cand
-                heapq.heappush(ctx.events, (cand, _DONE, run.ridx,
-                                            stage.sidx, tidx, -1))
+                ctx.events.push(cand, _DONE, run.ridx,
+                                stage.sidx, tidx, -1)
 
     # ---------------------------------------------------- request events
     def _io_advance(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
@@ -920,8 +1161,8 @@ class Coordinator:
             for s in specs:
                 rq = len(io.reqs)
                 io.reqs.append(_Req(s, True))
-                heapq.heappush(ctx.events, (t, _PUT_ISSUE, run.ridx,
-                                            stage.sidx, tidx, rq))
+                ctx.events.push(t, _PUT_ISSUE, run.ridx,
+                                stage.sidx, tidx, rq)
             return
 
     def _io_place_get(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
@@ -954,13 +1195,11 @@ class Coordinator:
             run.poll_gets += polls
             self._log(tt, "VISIBLE_AT", run, stage, tidx, rq, target=target,
                       polls=polls, avail=avail, lag=lag)
-            heapq.heappush(ctx.events, (tt, _VISIBLE, run.ridx, stage.sidx,
-                                        tidx, rq))
+            ctx.events.push(tt, _VISIBLE, run.ridx, stage.sidx, tidx, rq)
         else:
             # tt == max(lane_t, avail): issue as soon as the lane and the
             # producer allow
-            heapq.heappush(ctx.events, (tt, _GET_ISSUE, run.ridx,
-                                        stage.sidx, tidx, rq))
+            ctx.events.push(tt, _GET_ISSUE, run.ridx, stage.sidx, tidx, rq)
 
     @staticmethod
     def _req_stream(task: _Task, req: _Req) -> int:
@@ -989,21 +1228,20 @@ class Coordinator:
             self._log(t, "GET_ISSUE", run, stage, tidx, rq, key=req.target,
                       nbytes=req.spec.nbytes, conc=io.conc,
                       retargeted=retargeted, failed=True, tries=req.tries)
-            heapq.heappush(ctx.events, (t + t1, _INVOKE_FAIL, run.ridx,
-                                        stage.sidx, tidx, rq))
+            ctx.events.push(t + t1, _INVOKE_FAIL, run.ridx,
+                            stage.sidx, tidx, rq)
             return
         req.end = t + t1
         pol = self.policy.rsm
         if pol.enabled:
             timeout = pol.timeout_s(req.spec.nbytes, io.conc)
             if t1 > timeout:
-                heapq.heappush(ctx.events, (t + timeout, _DUP, run.ridx,
-                                            stage.sidx, tidx, rq))
+                ctx.events.push(t + timeout, _DUP, run.ridx,
+                                stage.sidx, tidx, rq)
         self._log(t, "GET_ISSUE", run, stage, tidx, rq, key=req.target,
                   nbytes=req.spec.nbytes, conc=io.conc,
                   retargeted=retargeted)
-        heapq.heappush(ctx.events, (req.end, _GET_DONE, run.ridx,
-                                    stage.sidx, tidx, rq))
+        ctx.events.push(req.end, _GET_DONE, run.ridx, stage.sidx, tidx, rq)
 
     def _on_put_issue(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
                       rq: int, t: float):
@@ -1025,20 +1263,19 @@ class Coordinator:
             self._log(t, "PUT_ISSUE", run, stage, tidx, rq,
                       key=req.spec.key, nbytes=req.spec.nbytes,
                       failed=True, tries=req.tries)
-            heapq.heappush(ctx.events, (t + t1, _INVOKE_FAIL, run.ridx,
-                                        stage.sidx, tidx, rq))
+            ctx.events.push(t + t1, _INVOKE_FAIL, run.ridx,
+                            stage.sidx, tidx, rq)
             return
         req.end = t + t1
         pol = self.policy.wsm
         if pol.enabled:
             start2 = pol.dup_start_s(send1, req.spec.nbytes)
             if t1 > start2:
-                heapq.heappush(ctx.events, (t + start2, _DUP, run.ridx,
-                                            stage.sidx, tidx, rq))
+                ctx.events.push(t + start2, _DUP, run.ridx,
+                                stage.sidx, tidx, rq)
         self._log(t, "PUT_ISSUE", run, stage, tidx, rq, key=req.spec.key,
                   nbytes=req.spec.nbytes)
-        heapq.heappush(ctx.events, (req.end, _PUT_DONE, run.ridx,
-                                    stage.sidx, tidx, rq))
+        ctx.events.push(req.end, _PUT_DONE, run.ridx, stage.sidx, tidx, rq)
 
     def _on_dup(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
                 rq: int, t: float):
@@ -1073,9 +1310,8 @@ class Coordinator:
         if new_end < req.end - _EPS:
             run.attr["dup_saved_s"] += req.end - new_end
             req.end = new_end               # original DONE event goes stale
-            heapq.heappush(ctx.events,
-                           (new_end, _PUT_DONE if req.put else _GET_DONE,
-                            run.ridx, stage.sidx, tidx, rq))
+            ctx.events.push(new_end, _PUT_DONE if req.put else _GET_DONE,
+                            run.ridx, stage.sidx, tidx, rq)
 
     def _on_req_done(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
                      rq: int, t: float, is_put: bool):
@@ -1125,14 +1361,13 @@ class Coordinator:
             # a backup duplicate already finished this task (its DONE
             # popped at backup_cap); release the slot now that the
             # original's full duration is known
-            heapq.heappush(ctx.slots, (task.start + task.dur, task.sid))
+            self._return_slot(ctx, run, task.start + task.dur, task.sid, t)
             self._drain_pending(ctx, t)
             return
         end = min(t, task.backup_cap)
         task.end = end
         run.ends[stage.st["name"]][tidx] = end
-        heapq.heappush(ctx.events,
-                       (end, _DONE, run.ridx, stage.sidx, tidx, -1))
+        ctx.events.push(end, _DONE, run.ridx, stage.sidx, tidx, -1)
 
     # ------------------------------------------------------- fault events
     def _on_worker_lost(self, ctx: _Ctx, run: _Run, stage: _Stage,
@@ -1150,12 +1385,12 @@ class Coordinator:
             if task.done:
                 # DONE already popped at the duplicate's completion;
                 # release the original's slot now that its dur is known
-                heapq.heappush(ctx.slots,
-                               (task.start + task.dur, task.sid))
+                self._return_slot(ctx, run, task.start + task.dur,
+                                  task.sid, t)
                 self._drain_pending(ctx, t)
             # else: _on_done pops at backup_cap and releases the slot
             return
-        heapq.heappush(ctx.slots, (t, task.sid))
+        self._return_slot(ctx, run, t, task.sid, t)
         self._drain_pending(ctx, t)
         if run.failed:
             return
@@ -1170,8 +1405,7 @@ class Coordinator:
             return
         back = self.retry.backoff_s(task.failures)
         run.attr["retry_s"] = run.attr.get("retry_s", 0.0) + back
-        heapq.heappush(ctx.events, (t + back, _RETRY, run.ridx,
-                                    stage.sidx, tidx, -1))
+        ctx.events.push(t + back, _RETRY, run.ridx, stage.sidx, tidx, -1)
 
     def _on_invoke_fail(self, ctx: _Ctx, run: _Run, stage: _Stage,
                         tidx: int, rq: int, t: float):
@@ -1196,8 +1430,8 @@ class Coordinator:
                 return
             back = self.retry.backoff_s(req.tries)
             run.attr["retry_s"] = run.attr.get("retry_s", 0.0) + back
-            heapq.heappush(ctx.events, (t + back, _RETRY, run.ridx,
-                                        stage.sidx, tidx, rq))
+            ctx.events.push(t + back, _RETRY, run.ridx, stage.sidx, tidx,
+                            rq)
             return
         # rq == -1: the invoke API call itself failed (detected now)
         if task.failures >= self.retry.max_attempts:
@@ -1205,8 +1439,7 @@ class Coordinator:
             return
         back = self.retry.backoff_s(task.failures)
         run.attr["retry_s"] = run.attr.get("retry_s", 0.0) + back
-        heapq.heappush(ctx.events, (t + back, _RETRY, run.ridx,
-                                    stage.sidx, tidx, -1))
+        ctx.events.push(t + back, _RETRY, run.ridx, stage.sidx, tidx, -1)
 
     def _on_retry(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
                   rq: int, t: float):
@@ -1234,10 +1467,11 @@ class Coordinator:
         self._log(t, "RETRY_FIRE", run, stage, tidx, -1,
                   reason=task.retry_reason, attempt=task.attempt + 1)
         task.attempt += 1
-        if not ctx.slots:
-            ctx.pending.append((run.ridx, stage.sidx, tidx))
+        if not ctx.slots or self._quota_blocked(run):
+            self._queue_task(ctx, run, stage.sidx, tidx)
             return
         t_claim, free_t, sid, virgin = self._claim_slot(ctx, t)
+        self._note_claim(run, stage, tidx, t_claim, sid)
         self._dispatch(ctx, run, stage, tidx, t_claim, free_t, sid, virgin)
 
     def _abandon_req(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
@@ -1272,7 +1506,8 @@ class Coordinator:
                 self._io_place_get(ctx, run, run.stages[csidx], ctidx, rq,
                                    max(lane_t, t))
         for di, think in ctx.deps_map.get(run.ridx, ()):
-            self._activate(ctx.runs[di], run.finish_t + think, ctx.events)
+            self._arrive(ctx, ctx.runs[di], run.finish_t + think)
+        self._query_finished(ctx, run, t)
 
     # ------------------------------------------------------- completions
     def _finish_stage(self, run: _Run, stage: _Stage):
@@ -1305,24 +1540,31 @@ class Coordinator:
                 ready = max(ready, done_ends[k - 1])
             if ok:
                 cons.ready_pushed = True
-                heapq.heappush(events, (max(ready, now), _READY, run.ridx,
-                                        cons.sidx, 0, -1))
+                events.push(max(ready, now), _READY, run.ridx,
+                            cons.sidx, 0, -1)
 
     def _finish(self, run: _Run) -> QueryResult:
         cost = QueryCost(run.task_seconds * WORKER_MEM_GB, run.invocations,
                          run.gets, run.puts)
+        # arrival_t == t0 except for admission-queued runs, where the
+        # admission wait lands in latency AND queue delay (the client
+        # submitted at arrival_t, the engine started the run at t0)
         queue_delay = 0.0 if math.isinf(run.first_start) \
-            else max(0.0, run.first_start - run.t0)
+            else max(0.0, run.first_start - run.arrival_t)
         return QueryResult(
-            run.display_name, run.finish_t - run.t0, run.final_result, cost,
+            run.display_name, run.finish_t - run.arrival_t,
+            run.final_result, cost,
             run.invocations - run.backups, run.backups,
             {k: (round(a - run.t0, 3), round(b - run.t0, 3))
              for k, (a, b) in run.stage_windows.items()},
-            run.task_seconds, run.t0, queue_delay, run.backup_slot_s,
+            run.task_seconds, run.arrival_t, queue_delay,
+            run.backup_slot_s,
             run.dup_gets, run.dup_puts, run.poll_gets, run.columns_read,
             {"queue_s": queue_delay, **run.attr}, run.name,
             failed=run.failed, fail_reason=run.fail_reason,
-            retries=run.retries, cold_starts=run.cold_starts)
+            retries=run.retries, cold_starts=run.cold_starts,
+            tenant=run.tenant.name if run.tenant is not None else "",
+            rejected=run.rejected)
 
     # ------------------------------------------------- calibration hooks
     def event_summary(self, query: str | None = None) -> dict:

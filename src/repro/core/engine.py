@@ -7,6 +7,8 @@ results (tests/test_query_engine.py).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core.coordinator import Coordinator, QueryResult
@@ -80,36 +82,48 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
     return coord, tables
 
 
-def build_plan(name: str, ntasks=None, **plan_kw) -> dict:
-    """One physical plan with per-stage task-count overrides applied —
-    the hook the cost-based planner (repro.planner) uses to turn a chosen
-    ``PlanConfig`` into a runnable plan."""
-    return QUERIES[name](ntasks, **plan_kw)
+def build_plan(name: str, tuning=None, **plan_kw) -> dict:
+    """One physical plan with tuning applied. ``tuning`` takes any form
+    ``planner.model.coerce_config`` accepts — a plain per-stage ntasks
+    dict, a planner ``PlanConfig``, the two-part ``{"ntasks", "plan_kw"}``
+    dict, or None — all normalized through the one canonical
+    ``PlanConfig.plan_kwargs`` path (core.session.QuerySpec uses the
+    same path, so every entry point builds identical plans)."""
+    from repro.core.session import QuerySpec
+    return QuerySpec(name, tuning, plan_kw or None).build_plan()
 
 
 def run_query(coord: Coordinator, name: str, ntasks=None, **plan_kw
               ) -> QueryResult:
-    # plan_kw reaches every builder: unsupported options fail loudly at the
-    # builder instead of being silently dropped for non-q12 queries
-    return coord.run_query(build_plan(name, ntasks, **plan_kw))
+    """Deprecated shim — use ``core.session.Session.submit``. Kept for
+    callers holding a bare coordinator; bit-identical to the Session
+    path (tests/test_session.py)."""
+    from repro.core.session import QuerySpec, Session
+    return Session.from_coordinator(coord).submit(
+        QuerySpec(name, ntasks, plan_kw or None))
 
 
 def run_queries(coord: Coordinator, specs, arrival_times=None, after=None
                 ) -> list[QueryResult]:
-    """Multiple queries on ONE shared slot pool, each with its own tuning.
-
-    ``specs`` entries are either a query name or ``(name, ntasks)`` /
-    ``(name, ntasks, plan_kw)`` — so planner-chosen per-stage parallelism
-    flows into a whole workload the same way it flows into ``run_query``.
-    """
-    plans = []
-    for spec in specs:
-        if isinstance(spec, str):
-            spec = (spec,)
-        name, ntasks = spec[0], spec[1] if len(spec) > 1 else None
-        plan_kw = spec[2] if len(spec) > 2 else None
-        plans.append(build_plan(name, ntasks, **(plan_kw or {})))
-    return coord.run_queries(plans, arrival_times, after=after)
+    """Deprecated shim — use ``core.session.Session.run``. ``specs``
+    entries are a query name or ``(name, tuning)`` / ``(name, tuning,
+    plan_kw)``; arrival times and closed-loop ``after`` edges ride on the
+    coerced QuerySpecs."""
+    from repro.core.session import QuerySpec, Session
+    qs = [QuerySpec.coerce(s) for s in specs]
+    if arrival_times is not None:
+        if len(arrival_times) != len(qs):
+            raise ValueError(f"{len(qs)} specs but {len(arrival_times)} "
+                             "arrival times")
+        qs = [dataclasses.replace(q, arrival_s=a)
+              for q, a in zip(qs, arrival_times)]
+    if after is not None:
+        if len(after) != len(qs):
+            raise ValueError(f"{len(qs)} specs but {len(after)} after "
+                             "entries")
+        qs = [dataclasses.replace(q, after=dep)
+              for q, dep in zip(qs, after)]
+    return Session.from_coordinator(coord).run(qs)
 
 
 # ---------------------------------------------------------------------------

@@ -42,7 +42,11 @@ def validate_plan(plan: dict):
         for d in st["deps"]:
             assert d in names, f"stage {st['name']} dep {d} not defined yet"
         names.add(st["name"])
-        assert st["kind"] in ("scan", "join", "combine", "final_agg"), st
+        # "modeled": a structural-model stage (workload.tenancy hybrid
+        # mode) — occupies real slots for a calibrated duration instead
+        # of executing a worker
+        assert st["kind"] in ("scan", "join", "combine", "final_agg",
+                              "modeled"), st
 
 
 def stage_by_name(plan: dict, name: str) -> dict:

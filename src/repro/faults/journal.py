@@ -97,32 +97,11 @@ class Journal:
 
 def run_with_failover(make_coordinator, plan: dict, *, kill_after: int,
                       checkpoint_every: int = 64):
-    """Kill a coordinator mid-query, fail over, and return the resumed
-    result.
-
-    ``make_coordinator(journal)`` must build a coordinator over the SAME
-    store/base splits each time (the failover story: the store survives
-    the coordinator). The first coordinator is killed after
-    ``kill_after`` event pops; a second one then replays the query with
-    ``store.verify_replay`` armed, asserting every overwrite is
-    byte-identical (§3.2 immutability) and every journal checkpoint
-    matches. Returns ``(result, journal)``.
-    """
-    journal = Journal(checkpoint_every)
-    coord = make_coordinator(journal)
-    journal.arm_kill(kill_after)
-    try:
-        coord.run_query(plan)
-    except CoordinatorKilled:
-        pass
-    else:
-        raise ValueError(f"kill_after={kill_after} exceeds the query's "
-                         "event count — nothing was killed")
-    journal.resume()
-    coord2 = make_coordinator(journal)
-    coord2.store.verify_replay = True
-    try:
-        result = coord2.run_query(plan)
-    finally:
-        coord2.store.verify_replay = False
-    return result, journal
+    """Deprecated shim — the body moved to ``core.session.Session
+    .failover`` (the unified Session API; ``Session.run_with_failover``
+    is the instance form that spawns replacements over the session's own
+    store). Kept for callers holding a coordinator factory; returns the
+    same ``(result, journal)`` bit-identically."""
+    from repro.core.session import Session
+    return Session.failover(make_coordinator, plan, kill_after=kill_after,
+                            checkpoint_every=checkpoint_every)

@@ -41,7 +41,8 @@ bit-identical frontier for any executor width. See
 pipeline in detail.
 """
 from repro.planner.calibrate import Calibration, RequestFit, calibrate
-from repro.planner.model import PlanConfig, Prediction, QueryModel
+from repro.planner.model import (PlanConfig, Prediction, QueryModel,
+                                 coerce_config)
 from repro.planner.search import (SCALAR_AXES, FrontierPoint,
                                   QueryEvaluator, SearchResult,
                                   coordinate_descent, pareto_front,
@@ -51,7 +52,7 @@ from repro.planner.sla import (SLAChoice, WorkloadSLAChoice, choice_spec,
 
 __all__ = [
     "Calibration", "RequestFit", "calibrate",
-    "PlanConfig", "Prediction", "QueryModel",
+    "PlanConfig", "Prediction", "QueryModel", "coerce_config",
     "FrontierPoint", "QueryEvaluator", "SCALAR_AXES", "SearchResult",
     "coordinate_descent", "pareto_front", "pareto_search",
     "SLAChoice", "WorkloadSLAChoice", "choice_spec", "select",

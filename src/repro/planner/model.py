@@ -153,6 +153,48 @@ class PlanConfig:
             backup_tasks=self.backup_tasks, doublewrite=self.doublewrite)
 
 
+def coerce_config(tuning=None, plan_kw: dict | None = None
+                  ) -> tuple[PlanConfig, dict]:
+    """THE canonical tuning normalizer: every accepted tuning form becomes
+    one ``(PlanConfig, plan_kwargs)`` pair at the API boundary.
+
+    ``tuning`` may be
+
+      * ``None`` — builder defaults;
+      * a :class:`PlanConfig` (or anything duck-typing ``ntasks_dict`` /
+        ``plan_kwargs``) — the planner's native form;
+      * a plain per-stage ntasks dict (e.g. ``{"join": 16}``);
+      * the explicit two-part form ``{"ntasks": ..., "plan_kw": ...}``.
+
+    ``plan_kw`` is extra builder kwargs from the call site; a searched
+    shuffle pick on the config overrides any ``shuffle`` in it (via
+    ``PlanConfig.plan_kwargs``). ``engine.build_plan``, ``workload.mix
+    .retune`` and ``core.session.QuerySpec`` all route through here, so
+    the dict forms are exactly equivalent to the config form everywhere.
+    """
+    base = dict(plan_kw or {})
+    if tuning is None:
+        cfg = PlanConfig()
+    elif hasattr(tuning, "ntasks_dict") and hasattr(tuning, "plan_kwargs"):
+        cfg = tuning
+    elif isinstance(tuning, dict) and ("ntasks" in tuning
+                                       or "plan_kw" in tuning):
+        extra = set(tuning) - {"ntasks", "plan_kw"}
+        if extra:
+            raise ValueError(
+                f"two-part tuning dict has unknown keys {sorted(extra)}; "
+                "expected only 'ntasks' / 'plan_kw'")
+        base = {**dict(tuning.get("plan_kw") or {}), **base}
+        cfg = PlanConfig.make(dict(tuning.get("ntasks") or {}))
+    elif isinstance(tuning, dict):
+        cfg = PlanConfig.make(tuning)
+    else:
+        raise TypeError(f"cannot coerce {type(tuning).__name__!r} into a "
+                        "PlanConfig (want PlanConfig | ntasks dict | "
+                        "{'ntasks', 'plan_kw'} | None)")
+    return cfg, cfg.plan_kwargs(base)
+
+
 @dataclasses.dataclass(frozen=True)
 class Prediction:
     latency_s: float

@@ -15,9 +15,12 @@ provisioned cluster?
   * :mod:`repro.workload.pricing` — daily-cost curves vs inter-arrival for
     Starling and every provisioned config, with the Fig-7 break-even
     frontier solver.
+  * :mod:`repro.workload.tenancy` — fleet-scale tenant streams: per-tenant
+    slot quotas, admission control, priority classes, and the calibrated
+    hybrid (event-exact + modeled) execution mode.
 
-Every future scenario layer (SLA studies, autoscaling the slot limit,
-tenant isolation) plugs in here rather than into the scheduler.
+Every future scenario layer (SLA studies, autoscaling the slot limit)
+plugs in here rather than into the scheduler.
 """
 from repro.workload.arrivals import (ClosedLoop, bursty, closed_loop,
                                      poisson, uniform)
@@ -25,10 +28,14 @@ from repro.workload.driver import (QueryRecord, WorkloadDriver,
                                    WorkloadResult)
 from repro.workload.mix import TPCH_MIX, QueryClass, retune, sample_mix
 from repro.workload.pricing import Frontier, frontier, solve_break_even
+from repro.workload.tenancy import (FleetResult, TenantSpec, TenantStream,
+                                    hybrid_parity, run_fleet)
 
 __all__ = [
     "ClosedLoop", "bursty", "closed_loop", "poisson", "uniform",
     "QueryRecord", "WorkloadDriver", "WorkloadResult",
     "TPCH_MIX", "QueryClass", "retune", "sample_mix",
     "Frontier", "frontier", "solve_break_even",
+    "FleetResult", "TenantSpec", "TenantStream", "hybrid_parity",
+    "run_fleet",
 ]

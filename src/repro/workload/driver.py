@@ -48,6 +48,15 @@ class QueryRecord:
     # per-request latency attribution straight from the scheduler's event
     # stream (queue/invoke/get/put/visibility/compute/dup_saved seconds)
     attribution: dict = dataclasses.field(default_factory=dict)
+    # §3 fault path: a query fails when a retry budget is exhausted; its
+    # latency is the time wasted, not a served response — summarize
+    # excludes it from latency percentiles and reports a failure rate
+    failed: bool = False
+    fail_reason: str = ""
+    # multi-tenant path (workload.tenancy): owning tenant, and whether
+    # admission control rejected the query outright (ran nothing)
+    tenant: str = ""
+    rejected: bool = False
 
     @property
     def finish_s(self) -> float:
@@ -79,17 +88,29 @@ class WorkloadResult:
 
 def summarize(records: list[QueryRecord], makespan_s: float) -> dict:
     """Percentile summaries (p50/p90/p99) of latency and queue delay, plus
-    the aggregates the pricing layer consumes."""
-    lat = np.asarray([r.latency_s for r in records], np.float64)
-    qd = np.asarray([r.queue_delay_s for r in records], np.float64)
+    the aggregates the pricing layer consumes.
+
+    Failed queries (exhausted §3 retry budgets) and admission-rejected
+    ones are EXCLUDED from the latency/queue-delay percentiles — a
+    failure is not a served response time — and surfaced instead as
+    ``failed`` / ``rejected`` counts and ``failure_rate`` (failures over
+    admitted queries). Cost aggregates keep every record: failed attempts
+    still billed their requests."""
+    ok = [r for r in records if not r.failed and not r.rejected]
+    lat = np.asarray([r.latency_s for r in ok], np.float64)
+    qd = np.asarray([r.queue_delay_s for r in ok], np.float64)
     total = float(sum(r.dollars for r in records))
     n = max(len(records), 1)
+    failed = sum(r.failed for r in records)
+    rejected = sum(r.rejected for r in records)
     out = {"queries": len(records), "makespan_s": float(makespan_s),
            "total_cost": total, "cost_per_query": total / n,
            "queries_per_hour": len(records) * 3600.0 / max(makespan_s,
                                                            1e-9),
            "backup_count": int(sum(r.backup_count for r in records)),
-           "backup_slot_s": float(sum(r.backup_slot_s for r in records))}
+           "backup_slot_s": float(sum(r.backup_slot_s for r in records)),
+           "failed": int(failed), "rejected": int(rejected),
+           "failure_rate": failed / max(len(records) - rejected, 1)}
     for name, xs in (("latency_s", lat), ("queue_delay_s", qd)):
         if len(xs):
             out[f"{name}_mean"] = float(xs.mean())
@@ -141,4 +162,6 @@ class WorkloadDriver:
         return QueryRecord(i, res.name, res.arrival_s, res.queue_delay_s,
                            res.latency_s, res.cost, res.task_count,
                            res.backup_count, res.backup_slot_s,
-                           dict(res.attribution))
+                           dict(res.attribution), failed=res.failed,
+                           fail_reason=res.fail_reason, tenant=res.tenant,
+                           rejected=res.rejected)

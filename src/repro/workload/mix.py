@@ -52,39 +52,31 @@ TPCH_MIX = (
 def retune(mix, overrides: dict) -> tuple[QueryClass, ...]:
     """Apply planner-chosen tunings to a mix's classes.
 
-    ``overrides`` maps query name -> one of
-
-      * a plain ntasks dict (e.g. ``{"join": 16}``) — per-stage task
-        counts only, the pre-multishuffle form;
-      * a ``repro.planner.PlanConfig`` (anything with ``ntasks_dict`` /
-        ``plan_kwargs``) — task counts AND plan options, so a searched
-        ``shuffle={"strategy": "multi", ...}`` pick flows into the mix;
-      * ``{"ntasks": ..., "plan_kw": ...}`` — the explicit form of the
-        same.
+    ``overrides`` maps query name -> tuning; values take any form
+    ``planner.model.coerce_config`` accepts — a plain ntasks dict, a
+    planner ``PlanConfig`` (so a
+    searched ``shuffle={"strategy": "multi", ...}`` pick flows into the
+    mix), or the explicit two-part ``{"ntasks": ..., "plan_kw": ...}``
+    dict — all normalized through the one canonical
+    ``PlanConfig.plan_kwargs`` path shared with ``engine.build_plan``
+    and ``core.session.QuerySpec``.
 
     Classes of other queries pass through untouched. Unknown query names
     raise (a typo'd override must not silently tune nothing).
     """
+    from repro.planner.model import coerce_config
     known = {c.query for c in mix}
     unknown = set(overrides) - known
     if unknown:
         raise ValueError(f"overrides for queries not in mix: "
                          f"{sorted(unknown)}")
-
-    def split(ov) -> tuple[dict, dict]:
-        if hasattr(ov, "ntasks_dict"):          # a planner PlanConfig
-            return ov.ntasks_dict, ov.plan_kwargs()
-        if "ntasks" in ov or "plan_kw" in ov:   # explicit two-part form
-            return dict(ov.get("ntasks") or {}), dict(ov.get("plan_kw")
-                                                      or {})
-        return dict(ov), {}
-
     out = []
     for c in mix:
         if c.query not in overrides:
             out.append(c)
             continue
-        nt, kw = split(overrides[c.query])
+        cfg, kw = coerce_config(overrides[c.query])
+        nt = cfg.ntasks_dict
         out.append(dataclasses.replace(
             c, ntasks={**(c.ntasks or {}), **nt},
             plan_kw={**(c.plan_kw or {}), **kw} or None))

@@ -1,0 +1,166 @@
+"""Unified Session API tests: the deprecation shims in core.engine and
+faults.journal must stay bit-identical to the Session methods they
+delegate to, QuerySpec/coerce_config must normalize every legacy tuning
+form to one plan, and failure metadata must thread onto QueryRecord."""
+import dataclasses
+
+import pytest
+
+from repro.core import engine as E
+from repro.core.engine import make_engine
+from repro.core.session import QuerySpec, Session
+from repro.faults.journal import Journal, run_with_failover
+from repro.planner.model import PlanConfig, coerce_config
+from repro.workload.driver import QueryRecord, summarize
+from repro.workload.mix import retune
+
+SF = 0.002
+OPTS = dict(sf=SF, seed=7, compute_scale=0)
+
+
+def _sig(r):
+    return (r.name, r.latency_s, r.queue_delay_s, r.cost.total,
+            r.cost.invocations, r.cost.gets, r.cost.puts, r.task_count)
+
+
+# ------------------------------------------------------------- QuerySpec
+def test_query_spec_coerce_forms():
+    assert QuerySpec.coerce("q6") == QuerySpec("q6")
+    assert QuerySpec.coerce(("q6", {"scan": 4})) == \
+        QuerySpec("q6", {"scan": 4})
+    s = QuerySpec.coerce(("q12", {"join": 8}, {"shuffle": None}))
+    assert s.tuning == {"join": 8} and s.plan_kw == {"shuffle": None}
+    spec = QuerySpec("q1", arrival_s=2.0)
+    assert QuerySpec.coerce(spec) is spec
+    with pytest.raises(ValueError):
+        QuerySpec("not_a_query")
+
+
+def test_coerce_config_normalizes_every_tuning_form():
+    """Plain ntasks dict, PlanConfig, and the two-part dict all land on
+    the same (config, plan kwargs) through one canonical path."""
+    plain = coerce_config({"join": 8})
+    cfg = coerce_config(PlanConfig.make({"join": 8}))
+    two = coerce_config({"ntasks": {"join": 8}, "plan_kw": {}})
+    assert plain[0].ntasks_dict == cfg[0].ntasks_dict \
+        == two[0].ntasks_dict == {"join": 8}
+    assert plain[1] == cfg[1] == two[1]
+    c, kw = coerce_config(None, {"pushdown": True})
+    assert c.ntasks_dict == {} and kw.get("pushdown") is True
+    with pytest.raises(ValueError):
+        coerce_config({"ntasks": {"join": 8}, "plankw": {}})  # typo'd key
+    with pytest.raises(TypeError):
+        coerce_config(42)
+
+
+def test_build_plan_accepts_all_forms_identically():
+    a = E.build_plan("q12", {"join": 8})
+    b = E.build_plan("q12", PlanConfig.make({"join": 8}))
+    c = E.build_plan("q12", {"ntasks": {"join": 8}})
+    d = QuerySpec("q12", {"join": 8}).build_plan()
+    assert a == b == c == d
+
+
+def test_retune_accepts_planconfig_and_two_part():
+    from repro.workload.mix import TPCH_MIX
+    r1 = retune(TPCH_MIX, {"q12": {"join": 16}})
+    r2 = retune(TPCH_MIX, {"q12": PlanConfig.make({"join": 16})})
+    r3 = retune(TPCH_MIX, {"q12": {"ntasks": {"join": 16},
+                                   "plan_kw": {}}})
+    assert r1 == r2
+    # the two-part form records plan_kw={} explicitly; plans still match
+    q1, q3 = (next(c for c in r if c.query == "q12") for r in (r1, r3))
+    assert q1.build_plan() == q3.build_plan()
+
+
+# ----------------------------------------------------- shim bit-identity
+def test_run_query_shim_matches_session_submit():
+    coord, _ = make_engine(**OPTS)
+    r_shim = E.run_query(coord, "q6", {"scan": 4})
+    sess = Session(**OPTS)
+    r_sess = sess.submit(("q6", {"scan": 4}))
+    assert _sig(r_shim) == _sig(r_sess)
+
+
+def test_run_queries_shim_matches_session_run():
+    specs = [("q6", {"scan": 4}), ("q1", {"scan": 4}), "q12"]
+    coord, _ = make_engine(**OPTS)
+    rs_shim = E.run_queries(coord, specs, arrival_times=[0.0, 0.5, 1.0])
+    sess = Session(**OPTS)
+    rs_sess = sess.run([dataclasses.replace(QuerySpec.coerce(s),
+                                            arrival_s=t)
+                        for s, t in zip(specs, [0.0, 0.5, 1.0])])
+    assert [_sig(r) for r in rs_shim] == [_sig(r) for r in rs_sess]
+
+
+def test_failover_shim_matches_session_run_with_failover():
+    def make():
+        coord, _ = make_engine(**OPTS)
+        return coord
+
+    def make_j(journal=None):
+        coord, _ = make_engine(**OPTS, journal=journal)
+        return coord
+
+    plan = E.build_plan("q6", {"scan": 4})
+    r_shim, j_shim = run_with_failover(make_j, plan, kill_after=30)
+    sess = Session(**OPTS)
+    r_sess, j_sess = sess.run_with_failover(("q6", {"scan": 4}),
+                                            kill_after=30)
+    assert _sig(r_shim) == _sig(r_sess)
+    assert j_shim.frontier == j_sess.frontier
+    assert isinstance(j_sess, Journal) and j_sess.replaying
+
+
+def test_session_spawn_reuses_store_and_options():
+    sess = Session(**OPTS)
+    r1 = sess.submit("q6")
+    c2 = sess.spawn()
+    assert c2 is not sess.coord
+    assert c2.store is sess.coord.store
+    assert c2.seed == sess.coord.seed
+    # fresh namespace: same query, same first-instance RNG draws
+    r2 = Session.from_coordinator(c2).submit("q6")
+    assert r1.latency_s == r2.latency_s
+
+
+def test_session_run_mix_matches_workload_driver():
+    from repro.workload import WorkloadDriver
+    from repro.workload.mix import TPCH_MIX, sample_mix
+    classes = sample_mix(TPCH_MIX, 5, seed=2)
+    arrivals = [0.0, 1.0, 2.0, 3.0, 4.0]
+    wr_sess = Session(**OPTS).run_mix(classes, arrivals)
+    coord, _ = make_engine(**OPTS)
+    wr_drv = WorkloadDriver(coord).run(classes, arrivals)
+    assert wr_sess.summary == wr_drv.summary
+
+
+# -------------------------------------------- failure metadata threading
+def test_summarize_excludes_failed_and_rejected():
+    from repro.core.cost import QueryCost
+
+    def rec(i, lat, **kw):
+        return QueryRecord(i, "q6", 0.0, 0.0, lat,
+                           QueryCost(0.0, 0, 0, 0), 1, 0, 0.0, **kw)
+
+    records = [rec(0, 1.0), rec(1, 2.0),
+               rec(2, 50.0, failed=True, fail_reason="retries"),
+               rec(3, 0.0, rejected=True, tenant="t0")]
+    s = summarize(records, 10.0)
+    assert s["failed"] == 1 and s["rejected"] == 1
+    assert s["failure_rate"] == pytest.approx(1 / 3)
+    # the failed query's 50s waste must not pollute the percentiles
+    assert s["latency_s_p99"] < 3.0
+    assert s["queries"] == 4
+
+
+def test_failed_flag_threads_from_faults():
+    """Exhausted retry budgets surface as failed records, not crashes."""
+    from repro.faults import FaultConfig
+    coord, _ = make_engine(sf=SF, seed=0, compute_scale=0,
+                           faults=FaultConfig(invoke_fail_rate=1.0))
+    res = coord.run_query(E.build_plan("q6", {"scan": 4}))
+    assert res.failed and res.fail_reason
+    from repro.workload import WorkloadDriver
+    r = WorkloadDriver._record(0, res)
+    assert r.failed and r.fail_reason == res.fail_reason
