@@ -19,7 +19,7 @@ BENCH_MODULES = [
     "parallel_reads", "straggler_cdf", "stragglers", "shuffle_cost",
     "query_latency", "cost_of_operation", "scalability", "concurrency",
     "workload", "breakeven", "tunable", "planner", "optimizations",
-    "roofline", "scan_pushdown", "faults", "tenancy",
+    "roofline", "scan_pushdown", "faults", "tenancy", "obs",
 ]
 
 # gated regression suites (benchmarks/check_regression.py): ``prefixes``
@@ -117,6 +117,26 @@ SUITES = {
             "tenancy_fleet_queries",
             "tenancy_fleet_makespan_s",
             "tenancy_fleet_rejected",
+        ],
+    },
+    "obs": {
+        "baseline": "benchmarks/baselines/BENCH_obs.json",
+        "refresh_only": "obs",
+        "prefixes": ("obs_",),
+        "keys": [
+            "obs_trace_identical",
+            "obs_trace_spans",
+            "obs_trace_marks",
+            "obs_get_p50_s",
+            "obs_get_p99_s",
+            "obs_hist_p99_relerr",
+            "obs_drift_null_flags",
+            "obs_drift_flagged",
+            "obs_drift_lag_queries",
+            "obs_fleet_queries",
+            "obs_fleet_spans",
+            "obs_fleet_queue_hwm",
+            "obs_dropped_events",
         ],
     },
 }

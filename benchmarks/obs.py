@@ -1,0 +1,208 @@
+"""Observability suite (ISSUE 9): the tracing/metrics layer must see
+everything and perturb nothing.
+
+Five sections, all on compute_scale=0 engines (every gated key is
+bit-stable across machines and executor widths):
+
+  A. non-perturbation — one mixed batch run untraced, then traced +
+     metered: QueryResults must be bit-identical, and the span/mark
+     census of the trace is gated (a silent taxonomy change shows up as
+     a count drift);
+  B. sketch accuracy — the streaming LogHistogram's GET p50/p99 vs the
+     exact percentiles of the same run's event log: relative error must
+     sit inside the one-bin bound (~7.5%);
+  C. drift gate — both directions of ``repro.obs.drift``: a mid-run 2x
+     GET base-latency regime shift must flag within a bounded number of
+     queries, and the unshifted twin must stay silent under seeded
+     thresholds;
+  D. fleet scale — the 1000-stream hybrid fleet (benchmarks/tenancy.py
+     section D) with a Tracer AND MetricsObserver attached: must still
+     clear an events/sec wall-clock floor (asserted, NOT gated) and
+     dumps the trace as a Chrome-format artifact (BENCH_obs_trace.json);
+  E. bounded recorder — ``max_events`` caps the legacy event log
+     drop-tail, with the drop count surfaced via ``event_summary()``.
+
+Gated keys: benchmarks/common.py SUITES["obs"]; baseline refresh:
+PYTHONPATH=src python -m benchmarks.run --quick --only obs \
+    --json benchmarks/baselines/BENCH_obs.json
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import emit, pct
+from repro.core.session import QuerySpec, Session
+from repro.obs.drift import DriftDetector
+from repro.workload import TenantSpec, TenantStream, run_fleet
+from repro.workload.mix import QueryClass
+
+SF = 0.002
+MIX = (QueryClass("q1", 2.0, {"scan": 4}),
+       QueryClass("q6", 3.0, {"scan": 4}),
+       QueryClass("q12", 1.0, {"join": 8}))
+FLEET_STREAMS = 1000            # section D (same in --quick)
+POPS_PER_S_FLOOR = 150.0        # traced-fleet wall floor (not gated)
+TRACE_ARTIFACT = "BENCH_obs_trace.json"
+
+#: one mixed batch reused by sections A and B: three classes, staggered
+#: arrivals, enough contention to exercise queueing + duplicates
+BATCH = [QuerySpec(q, nt, arrival_s=i * 0.4)
+         for i, (q, nt) in enumerate(
+             [("q1", {"scan": 4}), ("q6", {"scan": 4}),
+              ("q12", {"join": 8})] * 3)]
+
+
+def _session(seed: int = 3, **kw) -> Session:
+    kw.setdefault("max_parallel", 16)
+    return Session(sf=SF, seed=seed, compute_scale=0, **kw)
+
+
+def _sig(rs):
+    return [(r.name, r.latency_s, r.queue_delay_s, r.cost.total,
+             r.cost.invocations, r.cost.gets, r.cost.puts,
+             r.task_seconds, r.columns_read) for r in rs]
+
+
+def _non_perturbation():
+    base = _session().run(BATCH)
+    traced = _session(trace=True, metrics=True)
+    assert _sig(traced.run(BATCH)) == _sig(base), \
+        "tracing perturbed the results"
+    emit("obs_trace_identical", 1.0,
+         "traced batch bit-identical to the untraced twin")
+    traced.tracer.finalize()
+    traced.tracer.validate()
+    spans = list(traced.tracer.spans())
+    marks = sum(len(sp.marks) for sp in spans)
+    emit("obs_trace_spans", float(len(spans)),
+         f"span census of the {len(BATCH)}-query batch trace")
+    emit("obs_trace_marks", float(marks),
+         "point annotations (DUP_FIRE/VISIBLE_AT/SLOT_*/...) recorded")
+    by_kind = {k: sum(1 for sp in spans if sp.kind == k)
+               for k in ("query", "stage", "task", "request")}
+    print(f"# obs trace census: {by_kind}", flush=True)
+    assert by_kind["query"] == len(BATCH)
+
+
+def _sketch_accuracy():
+    s = _session(record_events=True, metrics=True)
+    s.run(BATCH)
+    durs = [info["dur"] for (_t, k, _q, _s, _ti, _rq, info)
+            in s.coord.event_log if k == "GET_DONE"]
+    h = s.metrics.registry.histogram("get_latency_s")
+    assert h.count == len(durs)
+    p50, p99 = h.quantile(0.5), h.quantile(0.99)
+    emit("obs_get_p50_s", p50, "sketched GET latency p50 (streaming)")
+    emit("obs_get_p99_s", p99, "sketched GET latency p99 (streaming)")
+    relerr = abs(p99 - pct(durs, 99)) / pct(durs, 99)
+    emit("obs_hist_p99_relerr", relerr,
+         "sketch p99 vs exact event-log p99 (one bin ~7.5% + sparse "
+         "tail rank-vs-interpolation slack)")
+    # the p99 sits in the sparse Pareto-straggler tail, where numpy's
+    # interpolated order statistic and the sketch's bin rank can differ
+    # by more than the bin width — 12% bounds bin + rank convention
+    assert relerr <= 0.12, f"sketch error {relerr:.3f} over the bound"
+    assert abs(p50 - pct(durs, 50)) / pct(durs, 50) <= 0.08
+
+
+def _drift_gate():
+    probe = _session(seed=11, record_events=True)
+    for _ in range(14):
+        probe.submit(("q6", {"scan": 4}))
+    summ = probe.coord.event_summary()
+    from repro.planner.calibrate import calibrate
+    ref = calibrate(summ)
+    # null twin: same workload shape, fresh seed, NO regime change
+    null = DriftDetector.from_summary(ref, summ, window=64, consecutive=2)
+    live = _session(seed=23)
+    live.coord.attach_observer(null)
+    for _ in range(16):
+        live.submit(("q6", {"scan": 4}))
+    emit("obs_drift_null_flags",
+         float(sum(r.flagged for r in null.reports)),
+         "false positives under the null (MUST stay 0)")
+    assert not null.flagged(), "drift detector flagged an unshifted run"
+    # shifted twin: double the GET base latency mid-run
+    det = DriftDetector.from_summary(ref, summ, window=64, consecutive=2)
+    shifted = _session(seed=23)
+    shifted.coord.attach_observer(det)
+    for _ in range(16):
+        shifted.submit(("q6", {"scan": 4}))
+    shift_at = det.queries_seen
+    gm = shifted.coord.store.config.get_model
+    shifted.coord.store.config.get_model = dataclasses.replace(
+        gm, base_median_s=gm.base_median_s * 2.0)
+    for _ in range(12):
+        shifted.submit(("q6", {"scan": 4}))
+    flag = det.first_flag("get")
+    emit("obs_drift_flagged", 1.0 if flag is not None else 0.0,
+         "2x GET base-latency shift detected (MUST stay 1)")
+    assert flag is not None, "regime shift went undetected"
+    lag = flag.queries_seen - shift_at
+    emit("obs_drift_lag_queries", float(lag),
+         "queries between the injected shift and the flag")
+    assert lag <= 6, f"detection lag {lag} queries over the bound"
+    assert not det.flagged("put"), "PUT side flagged without a PUT shift"
+
+
+def _traced_fleet(n_streams: int):
+    streams = [TenantStream.open_loop(
+        TenantSpec(f"t{i:04d}", slot_quota=8, priority="background"),
+        MIX, 1, mean_interarrival_s=5.0, seed=100 + i,
+        start=(i % 100) * 0.25) for i in range(n_streams - 1)]
+    streams.append(TenantStream.open_loop(
+        TenantSpec("fg", slot_quota=32), MIX, 3,
+        mean_interarrival_s=2.0, seed=7))
+    sess = _session(seed=11, max_parallel=64, trace=True, metrics=True)
+    t0 = time.perf_counter()
+    fr = run_fleet(sess, streams, mode="hybrid",
+                   probe_opts=dict(sf=SF, seed=11, compute_scale=0))
+    wall = time.perf_counter() - t0
+    pops_per_s = fr.event_pops / max(wall, 1e-9)
+    sess.tracer.finalize()
+    sess.tracer.validate()
+    spans = sum(1 for _ in sess.tracer.spans())
+    emit("obs_fleet_queries", float(fr.summary["queries"]),
+         f"{n_streams} tenant streams, traced + metered")
+    emit("obs_fleet_spans", float(spans),
+         "span census of the full fleet trace")
+    emit("obs_fleet_queue_hwm",
+         float(sess.coord.last_event_depth_hwm),
+         "event-heap depth high-water mark during the fleet run")
+    # wall-clock throughput with observers ON: asserted, NOT gated
+    print(f"# obs fleet: {fr.event_pops} pops in {wall:.2f}s wall "
+          f"({pops_per_s:,.0f} pops/s, traced)", flush=True)
+    assert pops_per_s > POPS_PER_S_FLOOR, \
+        f"{pops_per_s:.0f} pops/s under the {POPS_PER_S_FLOOR:.0f} " \
+        f"floor with tracing on"
+    n_events = len(sess.tracer.to_chrome(TRACE_ARTIFACT))
+    print(f"# obs fleet trace: {n_events} chrome events -> "
+          f"{TRACE_ARTIFACT}", flush=True)
+    # fleet-scale report renders from the same run (rollup smoke)
+    rep = fr.report(registry=sess.metrics.registry)
+    assert "per tenant:" in rep.to_text(max_rows=5)
+
+
+def _bounded_recorder():
+    s = _session(record_events=True, max_events=64)
+    s.submit(("q12", {"join": 8}))
+    assert len(s.coord.event_log) == 64
+    dropped = s.coord.event_summary()["dropped_events"]
+    emit("obs_dropped_events", float(dropped),
+         "events dropped past the max_events=64 cap (q12 join-8)")
+    assert dropped > 0
+
+
+def main(quick: bool = False):
+    # quick mode keeps everything: the suite IS the overhead argument,
+    # and the whole thing runs in seconds of wall
+    _non_perturbation()
+    _sketch_accuracy()
+    _drift_gate()
+    _traced_fleet(FLEET_STREAMS)
+    _bounded_recorder()
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,12 @@
 ``name,us_per_call,derived`` CSV. ``--quick`` shrinks sizes for CI;
 ``--only`` takes a comma-separated module list; ``--json PATH`` also
 writes the emitted rows as machine-readable JSON (name -> value ->
-derived) so the perf trajectory can be tracked across commits."""
+derived) so the perf trajectory can be tracked across commits;
+``--trace PATH`` traces every coordinator any selected benchmark builds
+(``repro.obs.trace.install_global_tracer``) and dumps ONE Chrome
+trace_event file viewable at chrome://tracing or ui.perfetto.dev —
+tracing is read-only, so the emitted numbers are unchanged (the CI suite
+gates run with it on to prove exactly that)."""
 from __future__ import annotations
 
 import argparse
@@ -21,6 +26,9 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (e.g. "
                          "BENCH_workload.json)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="dump a Chrome trace of every coordinator the "
+                         "selected benchmarks build (obs layer)")
     args = ap.parse_args()
 
     only = set(args.only.split(",")) if args.only else None
@@ -28,6 +36,10 @@ def main() -> None:
         unknown = only - set(BENCH_MODULES)
         if unknown:
             raise SystemExit(f"unknown benchmark(s): {sorted(unknown)}")
+    trace_handle = None
+    if args.trace:
+        from repro.obs.trace import install_global_tracer
+        trace_handle = install_global_tracer()
     print("name,us_per_call,derived")
     try:
         for name in BENCH_MODULES:
@@ -44,6 +56,11 @@ def main() -> None:
                       f"FAILED {e!r}", flush=True)
                 raise
     finally:
+        if trace_handle is not None:
+            n = trace_handle.export(args.trace)
+            trace_handle.uninstall()
+            print(f"# wrote {n} trace events to {args.trace} "
+                  "(chrome://tracing / ui.perfetto.dev)", flush=True)
         if args.json:
             from benchmarks.common import RECORDS
             with open(args.json, "w") as f:

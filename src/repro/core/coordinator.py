@@ -351,11 +351,17 @@ class _Ctx:
 
 
 class Coordinator:
+    # zero-arg callables producing an observer for EVERY new coordinator —
+    # how `benchmarks/run.py --trace` traces existing benchmarks without
+    # touching them (see repro.obs.trace.install_global_tracer)
+    observer_factories: list = []
+
     def __init__(self, store: ObjectStore, base_splits: dict[str, list[str]],
                  policy: StragglerConfig | None = None, *, seed: int = 0,
                  max_parallel: int = 1000, compute_scale: float = 1.0,
                  executor_workers: int | None = None,
                  record_events: bool = False,
+                 max_events: int | None = None,
                  faults: FaultInjector | FaultConfig | None = None,
                  coldstart: ColdStartConfig | None = None,
                  retry: RetryPolicy | None = None,
@@ -381,8 +387,21 @@ class Coordinator:
         self.coldstart = coldstart
         self.retry = retry or RetryPolicy()
         self.journal = journal
-        # request-level event log: (t, kind, query, stage, task, req, info)
+        # request-level event log: (t, kind, query, stage, task, req, info).
+        # ``max_events`` caps the list on fleet-scale runs (the drop count
+        # is surfaced on event_summary); observers (repro.obs) stream the
+        # same tuples uncapped without storing them.
         self.event_log: list[tuple] | None = [] if record_events else None
+        self.max_events = max_events
+        self.dropped_events = 0
+        # read-only observers (repro.obs tracers/metrics/drift): each gets
+        # every logged tuple PLUS lifecycle kinds (QUERY_START, STAGE_READY,
+        # STAGE_END, TASK_START, TASK_END, QUERY_DONE) that never enter
+        # event_log — event_summary's task windows and the tenancy model
+        # bank parse the legacy stream, whose shape stays frozen. Observers
+        # only read popped state, so attaching one cannot perturb virtual
+        # time (the no-perturbation contract gated by benchmarks/obs.py).
+        self.observers: list = [f() for f in self.observer_factories]
         self._small_cache: dict[str, Table] = {}
         self._cache_lock = threading.Lock()
         self._name_counts: dict[str, int] = {}
@@ -391,6 +410,7 @@ class Coordinator:
         # (the tenancy benchmark's events/sec numerator) and per-tenant
         # quota/admission state (tests assert max_held <= slot_quota)
         self.last_event_pops = 0
+        self.last_event_depth_hwm = 0
         self.tenant_states: dict[str, _TenantState] = {}
 
     # ------------------------------------------------------------ helpers
@@ -460,11 +480,34 @@ class Coordinator:
             return st["tasks"] or len(self.base_splits[st["table"]])
         return max(st.get("tasks", 1), 1)
 
+    def attach_observer(self, ob) -> None:
+        """Attach a read-only event observer (repro.obs). ``ob.on_event``
+        receives every logged tuple ``(t, kind, query, stage, tidx, rq,
+        info)`` plus the lifecycle kinds — streamed at the pop, never
+        stored here, regardless of ``record_events``."""
+        self.observers.append(ob)
+
+    def detach_observer(self, ob) -> None:
+        self.observers.remove(ob)
+
     def _log(self, t: float, name: str, run: _Run, stage: _Stage,
              tidx: int, rq: int, **info):
         if self.event_log is not None:
-            self.event_log.append((t, name, run.name, stage.st["name"],
-                                   tidx, rq, info))
+            if self.max_events is not None and \
+                    len(self.event_log) >= self.max_events:
+                self.dropped_events += 1
+            else:
+                self.event_log.append((t, name, run.name, stage.st["name"],
+                                       tidx, rq, info))
+        for ob in self.observers:
+            ob.on_event(t, name, run.name, stage.st["name"], tidx, rq, info)
+
+    def _notify(self, t: float, name: str, run: _Run, stage_name: str,
+                tidx: int, **info):
+        """Lifecycle kinds for observers ONLY: the legacy event_log shape
+        (and everything parsing it) must not change."""
+        for ob in self.observers:
+            ob.on_event(t, name, run.name, stage_name, tidx, -1, info)
 
     # ---------------------------------------------------- plan preparation
     def _expand_plan(self, plan: dict, unique_name: str) -> dict:
@@ -647,6 +690,7 @@ class Coordinator:
                                       is_put=(kind == _PUT_DONE))
 
         self.last_event_pops = events.popped
+        self.last_event_depth_hwm = events.depth_hwm
         return [self._finish(run) for run in runs]
 
     # ----------------------------------------------------- loop plumbing
@@ -676,13 +720,17 @@ class Coordinator:
             run, stage, tidx = ctx.outstanding.pop(f)
             self._resolve(ctx, run, stage, tidx, f.result())
 
-    @staticmethod
-    def _activate(run: _Run, t0: float, events: EventQueue):
+    def _activate(self, run: _Run, t0: float, events: EventQueue):
         """Arm a run's root stages at virtual time t0 (query start)."""
         run.t0 = t0
         run.finish_t = t0
         if math.isnan(run.arrival_t):
             run.arrival_t = t0
+        if self.observers:
+            self._notify(t0, "QUERY_START", run, "", -1,
+                         display=run.display_name, arrival=run.arrival_t,
+                         tenant=run.tenant.name if run.tenant is not None
+                         else "")
         for stage in run.stages:
             if not stage.st["deps"]:
                 stage.ready_pushed = True
@@ -883,6 +931,9 @@ class Coordinator:
         task.sid = sid
         task.retrying = False
         run.attr["invoke_s"] += overhead
+        if self.observers:
+            self._notify(t_claim, "TASK_START", run, stage.st["name"], tidx,
+                         start=start, sid=sid, attempt=task.attempt)
         if task.result is not None:
             # worker-loss replay: real bytes already moved and the timeline
             # is known — re-bill the attempt's requests and re-advance a
@@ -970,6 +1021,9 @@ class Coordinator:
             return
         stage.dispatched = True
         stage.ready_t = t
+        if self.observers:
+            self._notify(t, "STAGE_READY", run, stage.st["name"], -1,
+                         tasks=stage.n, kind=stage.st["kind"])
         for ti in range(stage.n):
             if not ctx.slots or self._quota_blocked(run):
                 self._queue_task(ctx, run, stage.sidx, ti)
@@ -1005,6 +1059,9 @@ class Coordinator:
             return                        # stale event (end superseded)
         task.done = True
         stage.done += 1
+        if self.observers:
+            self._notify(t, "TASK_END", run, stage.st["name"], tidx,
+                         end=t, mid_flight=not task.io_done)
         if task.io_done:
             # the slot stays busy for the ORIGINAL duration even when a
             # backup duplicate finished the task's work earlier
@@ -1052,6 +1109,9 @@ class Coordinator:
                 for di, think in ctx.deps_map.get(run.ridx, ()):
                     self._arrive(ctx, ctx.runs[di], run.finish_t + think)
                 self._query_finished(ctx, run, t)
+                if self.observers:
+                    self._notify(t, "QUERY_DONE", run, "", -1,
+                                 finish=run.finish_t, failed=False)
         self._check_consumers(run, stage.st["name"], ctx.events, t)
 
     def _on_backup(self, ctx: _Ctx, run: _Run, stage: _Stage, tidx: int,
@@ -1508,12 +1568,19 @@ class Coordinator:
         for di, think in ctx.deps_map.get(run.ridx, ()):
             self._arrive(ctx, ctx.runs[di], run.finish_t + think)
         self._query_finished(ctx, run, t)
+        if self.observers:
+            self._notify(t, "QUERY_DONE", run, "", -1,
+                         finish=run.finish_t, failed=True, reason=reason)
 
     # ------------------------------------------------------- completions
     def _finish_stage(self, run: _Run, stage: _Stage):
         name = stage.st["name"]
         run.stage_windows[name] = (min(tk.start for tk in stage.tasks),
                                    max(tk.end for tk in stage.tasks))
+        if self.observers:
+            self._notify(max(tk.end for tk in stage.tasks), "STAGE_END",
+                         run, name, -1,
+                         start=min(tk.start for tk in stage.tasks))
         if stage.st is run.plan["stages"][-1]:
             run.finish_t = max(tk.end for tk in stage.tasks)
 
@@ -1593,6 +1660,10 @@ class Coordinator:
         count), ``request_tries`` (try index -> issue count — per-attempt
         counts for calibration), ``cold_starts``/``cold_s`` (COLD_START
         count and summed extra), ``query_fails``.
+
+        ``dropped_events`` reports how many log appends the ``max_events``
+        cap swallowed — nonzero means the samples here are a prefix of the
+        run, so fits from them cover only the run's start.
         """
         gets: list[tuple[int, float]] = []
         puts: list[tuple[int, float]] = []
@@ -1686,7 +1757,8 @@ class Coordinator:
                 "retry_reasons": retry_reasons,
                 "request_tries": request_tries,
                 "cold_starts": cold_starts, "cold_s": cold_s,
-                "query_fails": query_fails, "stages": stages}
+                "query_fails": query_fails, "stages": stages,
+                "dropped_events": self.dropped_events}
 
     # ---------------------------------------------------------- task build
     def _build_task(self, run: _Run, st, ti, w: Worker, start):

@@ -50,7 +50,7 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
                 max_parallel: int = 1000, target_bytes: int = 1 << 20,
                 compute_scale: float = 1.0,
                 executor_workers: int | None = None,
-                record_events: bool = False,
+                record_events: bool = False, max_events: int | None = None,
                 faults=None, coldstart=None, retry=None, journal=None):
     """(coordinator, tables) over a fresh simulated store.
 
@@ -63,7 +63,10 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
     sweeping contention without also regenerating the data (Fig 13).
     ``record_events=True`` keeps the coordinator's request-level event log
     (GET/PUT issue/done, DUP_FIRE, VISIBLE_AT, BACKUP_FIRE) in
-    ``coord.event_log`` for the straggler benchmarks and tests.
+    ``coord.event_log`` for the straggler benchmarks and tests;
+    ``max_events`` caps that list (drops counted in
+    ``coord.dropped_events`` — see repro.obs for the streaming
+    alternative that needs no cap).
     ``faults``/``coldstart``/``retry``/``journal`` configure the §3 fault
     path (repro.faults); all default off, in which case the engine is
     bit-identical to the fault-free one.
@@ -76,7 +79,7 @@ def make_engine(sf: float = 0.002, *, seed: int = 0,
                         max_parallel=max_parallel,
                         compute_scale=compute_scale,
                         executor_workers=executor_workers,
-                        record_events=record_events,
+                        record_events=record_events, max_events=max_events,
                         faults=faults, coldstart=coldstart, retry=retry,
                         journal=journal)
     return coord, tables

@@ -55,10 +55,13 @@ class EventQueue:
 
     API: ``push(t, kind, ridx, sidx, tidx, rq)``, ``pop() -> tuple``,
     ``peek_t() -> float``, ``__len__``/``__bool__``; ``popped`` counts
-    total pops (the tenancy benchmark's events/sec numerator).
+    total pops (the tenancy benchmark's events/sec numerator) and
+    ``depth_hwm`` the high-water queue depth (the obs layer's backlog
+    gauge — how deep the scheduler's future ever got).
     """
 
-    __slots__ = ("_near", "_far_t", "_far_pk", "_lo", "_fhead", "popped")
+    __slots__ = ("_near", "_far_t", "_far_pk", "_lo", "_fhead", "popped",
+                 "depth_hwm")
 
     def __init__(self):
         self._near: list[tuple] = []          # heapq of event tuples
@@ -67,6 +70,7 @@ class EventQueue:
         self._lo = 0                           # backlog consume index
         self._fhead: tuple | None = None       # cached backlog head tuple
         self.popped = 0
+        self.depth_hwm = 0
 
     # ------------------------------------------------------------- sizing
     def __len__(self) -> int:
@@ -86,6 +90,9 @@ class EventQueue:
                 f"event field out of packed range: kind={kind} ridx={ridx} "
                 f"sidx={sidx} tidx={tidx} rq={rq} (see events.py layout)")
         heapq.heappush(self._near, (t, kind, ridx, sidx, tidx, rq))
+        depth = len(self._near) + (len(self._far_t) - self._lo)
+        if depth > self.depth_hwm:
+            self.depth_hwm = depth
         if len(self._near) >= NEAR_LIMIT:
             self._flush()
 

@@ -77,12 +77,31 @@ class Session:
     ``Session(**engine_opts)`` builds a fresh engine (same options as
     ``engine.make_engine``); ``Session.from_coordinator(coord)`` wraps an
     existing one (``tables`` is then None).
+
+    ``trace=True`` attaches a :class:`repro.obs.trace.Tracer` (exposed as
+    ``session.tracer``): every run records a causal span tree (query ->
+    stage -> task -> request), exportable to Chrome/Perfetto via
+    ``session.tracer.to_chrome(path)``. ``metrics=True`` attaches a
+    :class:`repro.obs.metrics.MetricsObserver` (``session.metrics``).
+    Both are read-only observers of popped events — results are
+    bit-identical with them on or off (tests/test_obs.py).
     """
 
-    def __init__(self, **engine_opts):
+    def __init__(self, *, trace: bool = False, metrics: bool = False,
+                 **engine_opts):
         from repro.core.engine import make_engine
         self.engine_opts = dict(engine_opts)
         self.coord, self.tables = make_engine(**engine_opts)
+        self.tracer = None
+        self.metrics = None
+        if trace:
+            from repro.obs.trace import Tracer
+            self.tracer = Tracer()
+            self.coord.attach_observer(self.tracer)
+        if metrics:
+            from repro.obs.metrics import MetricsObserver
+            self.metrics = MetricsObserver()
+            self.coord.attach_observer(self.metrics)
 
     @classmethod
     def from_coordinator(cls, coord: Coordinator) -> "Session":
@@ -90,6 +109,8 @@ class Session:
         sess.engine_opts = {}
         sess.coord = coord
         sess.tables = None
+        sess.tracer = None
+        sess.metrics = None
         return sess
 
     # ------------------------------------------------------------ running
@@ -132,7 +153,8 @@ class Session:
             c.store, c.base_splits, c.policy, seed=c.seed,
             max_parallel=c.max_parallel, compute_scale=c.compute_scale,
             executor_workers=c.executor_workers,
-            record_events=c.event_log is not None, faults=c.faults,
+            record_events=c.event_log is not None,
+            max_events=c.max_events, faults=c.faults,
             coldstart=c.coldstart, retry=c.retry, journal=journal)
 
     @staticmethod

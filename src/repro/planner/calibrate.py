@@ -129,6 +129,17 @@ def _fit_requests(samples: list[tuple[int, float]], default: RequestFit
                       samples=len(samples))
 
 
+def fit_request_samples(samples: list[tuple[int, float]],
+                        model: LatencyModel) -> RequestFit:
+    """Public fitting entry point: the same median-based robust fit the
+    probe calibration uses, over any (nbytes, duration) sample list, with
+    ``model`` supplying the analytic fallback below :data:`MIN_SAMPLES`.
+    The live drift detector (``repro.obs.drift``) refits rolling windows
+    through this, so a drift verdict compares like with like — identical
+    estimator on both sides of the reference."""
+    return _fit_requests(list(samples), _default_fit(model))
+
+
 def calibrate(summary: dict, *, probe_rsm: bool = True,
               probe_wsm: bool = True) -> Calibration:
     """Fit a :class:`Calibration` from ``Coordinator.event_summary()``.

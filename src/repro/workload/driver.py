@@ -48,6 +48,8 @@ class QueryRecord:
     # per-request latency attribution straight from the scheduler's event
     # stream (queue/invoke/get/put/visibility/compute/dup_saved seconds)
     attribution: dict = dataclasses.field(default_factory=dict)
+    # §3.2 pushdown effectiveness: column segments actually fetched
+    columns_read: int = 0
     # §3 fault path: a query fails when a retry budget is exhausted; its
     # latency is the time wasted, not a served response — summarize
     # excludes it from latency percentiles and reports a failure rate
@@ -84,6 +86,12 @@ class WorkloadResult:
     @property
     def queries_per_hour(self) -> float:
         return len(self.records) * 3600.0 / max(self.makespan_s, 1e-9)
+
+    def report(self):
+        """Per-query-class rollup of this workload
+        (:func:`repro.obs.report.workload_report`)."""
+        from repro.obs.report import workload_report
+        return workload_report(self)
 
 
 def summarize(records: list[QueryRecord], makespan_s: float) -> dict:
@@ -123,6 +131,10 @@ def summarize(records: list[QueryRecord], makespan_s: float) -> dict:
     for comp in comps:
         xs = [r.attribution.get(comp, 0.0) for r in records]
         out[f"attr_{comp}_mean"] = float(np.mean(xs))
+        out[f"attr_{comp}_total"] = float(np.sum(xs))
+    # §3.2 pushdown rollup: column segments fetched across the workload
+    out["columns_read_total"] = int(sum(r.columns_read for r in records))
+    out["columns_read_mean"] = out["columns_read_total"] / n
     return out
 
 
@@ -162,6 +174,8 @@ class WorkloadDriver:
         return QueryRecord(i, res.name, res.arrival_s, res.queue_delay_s,
                            res.latency_s, res.cost, res.task_count,
                            res.backup_count, res.backup_slot_s,
-                           dict(res.attribution), failed=res.failed,
+                           dict(res.attribution),
+                           columns_read=res.columns_read,
+                           failed=res.failed,
                            fail_reason=res.fail_reason, tenant=res.tenant,
                            rejected=res.rejected)

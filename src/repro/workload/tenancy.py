@@ -123,6 +123,13 @@ class FleetResult:
     def total_slot_seconds(self) -> float:
         return float(sum(self.slot_seconds.values()))
 
+    def report(self, *, registry=None):
+        """Per-tenant / per-query-class rollup of this fleet run
+        (:func:`repro.obs.report.fleet_report`); ``registry`` merges a
+        :class:`repro.obs.metrics.MetricsRegistry` snapshot in."""
+        from repro.obs.report import fleet_report
+        return fleet_report(self, registry=registry)
+
 
 # ---------------------------------------------------------------------------
 # hybrid mode: probe-calibrated modeled plans

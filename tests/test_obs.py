@@ -1,0 +1,323 @@
+"""Observability subsystem tests (repro.obs).
+
+The load-bearing contract: observers are READ-ONLY — a traced run's
+QueryResults are bit-identical to an untraced run's, at any executor
+width. On top of that: span-tree well-formedness (live parents, nested
+intervals, taxonomy order), Chrome trace_event export round-trips,
+histogram sketches hit their error bound and merge exactly, the drift
+detector flags a regime shift and stays silent under the null, the
+legacy recorder's max_events cap counts its drops, and the workload
+rollups thread columns_read / attribution totals.
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.coordinator import Coordinator
+from repro.core.session import Session
+from repro.obs.drift import DriftDetector, drift_stat
+from repro.obs.metrics import LogHistogram, MetricsRegistry
+from repro.obs.trace import Tracer, from_chrome, install_global_tracer
+from repro.objectstore.latency import S3_GET_MODEL
+from repro.planner.calibrate import (RequestFit, calibrate,
+                                     fit_request_samples)
+from repro.workload.mix import QueryClass
+from repro.workload.tenancy import TenantSpec, TenantStream
+
+SF = 0.002
+OPTS = dict(sf=SF, seed=7, compute_scale=0)
+SPECS = [("q1", {"scan": 3}), ("q6", {"scan": 2}), ("q12", {"join": 4})]
+MIX = (QueryClass("q1", 2.0, {"scan": 3}),
+       QueryClass("q6", 3.0, {"scan": 2}))
+
+
+def _sig(rs):
+    return [(r.name, r.latency_s, r.queue_delay_s, r.cost.total,
+             r.cost.invocations, r.cost.gets, r.cost.puts,
+             r.task_seconds, r.columns_read) for r in rs]
+
+
+@pytest.fixture(scope="module")
+def traced():
+    """One traced+metered+event-logged session, reused module-wide."""
+    s = Session(**OPTS, executor_workers=2, record_events=True,
+                trace=True, metrics=True)
+    results = s.run(SPECS)
+    s.tracer.finalize()
+    return s, results
+
+
+# ------------------------------------------------------ no perturbation
+@pytest.mark.parametrize("width", [1, 8])
+def test_trace_on_off_bit_identical(traced, width):
+    """The hard contract: tracing cannot move a single bit of the
+    results, at either executor width."""
+    _, base = traced
+    s = Session(**OPTS, executor_workers=width)
+    assert _sig(s.run(SPECS)) == _sig(base)
+
+
+def test_observer_attach_detach_round_trip():
+    s = Session(**OPTS, executor_workers=2)
+    t = Tracer()
+    s.coord.attach_observer(t)
+    s.submit(("q6", {"scan": 2}))
+    assert list(t.spans())
+    s.coord.detach_observer(t)
+    n = len(list(t.spans()))
+    s.submit(("q6", {"scan": 2}))
+    assert len(list(t.spans())) == n        # detached: saw nothing new
+
+
+# ------------------------------------------------------- span tree shape
+def test_span_tree_well_formed(traced):
+    s, _ = traced
+    t = s.tracer
+    t.validate()
+    assert len(t.roots) == len(SPECS)
+    # taxonomy: every request sits under a task under a stage under a
+    # query (validate() checks rank order; pin the exact depth too)
+    assert list(t.spans("request"))
+    for sp in t.spans("request"):
+        assert sp.parent.kind == "task"
+        assert sp.parent.parent.kind == "stage"
+        assert sp.parent.parent.parent.kind == "query"
+    # every span has a live parent link inside the same tree
+    for root in t.roots:
+        tree = set(map(id, root.walk()))
+        for sp in root.walk():
+            if sp.parent is not None:
+                assert id(sp.parent) in tree
+
+
+def test_spans_match_results(traced):
+    """Trace content agrees with the run it observed: per-query root
+    interval == latency, task/stage span counts == the result's counts,
+    and every GET/PUT completion closed exactly one request span."""
+    s, results = traced
+    t = s.tracer
+    for res in results:
+        root = t.query(res.name)
+        assert root.meta["started"] and not root.meta["failed"]
+        end = root.meta.get("effective_end", root.end)
+        assert end - root.meta["arrival"] == pytest.approx(res.latency_s)
+        tasks = [sp for sp in root.walk() if sp.kind == "task"]
+        assert len(tasks) == res.task_count     # no faults: one attempt
+        stages = [sp for sp in root.walk() if sp.kind == "stage"]
+        assert len(stages) == len(res.stage_times)
+    reqs = list(t.spans("request"))
+    log = s.coord.event_log
+    dones = sum(1 for ev in log if ev[1] in ("GET_DONE", "PUT_DONE"))
+    issues = sum(1 for ev in log if ev[1] in ("GET_ISSUE", "PUT_ISSUE"))
+    assert sum(1 for sp in reqs if "dur" in sp.meta) == dones
+    assert len(reqs) >= issues              # each issue opened a span
+
+
+def test_chrome_export_round_trips(traced, tmp_path):
+    s, _ = traced
+    t = s.tracer
+    path = tmp_path / "trace.json"
+    events = t.to_chrome(str(path))
+    data = json.loads(path.read_text())
+    assert data["traceEvents"] == json.loads(json.dumps(events))
+    roots = from_chrome(data)
+    spans = list(t.spans())
+    rebuilt = [sp for r in roots for sp in r.walk()]
+    assert len(rebuilt) == len(spans)
+    by_uid = {sp.uid: sp for sp in rebuilt}
+    for sp in spans:
+        rb = by_uid[sp.uid]
+        assert rb.kind == sp.kind and rb.name == sp.name
+        assert rb.start == pytest.approx(sp.start)
+        assert rb.end == pytest.approx(sp.end)
+        assert (rb.parent.uid if rb.parent else None) == \
+            (sp.parent.uid if sp.parent else None)
+        assert len(rb.marks) == len(sp.marks)
+
+
+def test_global_tracer_hook():
+    """install_global_tracer traces coordinators built AFTER install,
+    and uninstall stops it — the run.py --trace mechanism."""
+    handle = install_global_tracer()
+    try:
+        s = Session(**OPTS, executor_workers=2)
+        assert s.coord.observers == [handle.tracer]
+        s.submit(("q6", {"scan": 2}))
+        assert any(sp.name == "q6" for sp in handle.tracer.roots)
+    finally:
+        handle.uninstall()
+    s2 = Session(**OPTS, executor_workers=2)
+    assert s2.coord.observers == []
+    assert Coordinator.observer_factories == []
+
+
+# ------------------------------------------------------------- histogram
+def test_log_histogram_quantiles_within_bound():
+    rng = np.random.default_rng(3)
+    xs = rng.lognormal(math.log(0.02), 0.8, size=20_000)
+    h = LogHistogram()
+    for x in xs:
+        h.record(float(x))
+    assert h.count == len(xs)
+    assert h.sum == pytest.approx(xs.sum())
+    for q in (0.5, 0.95, 0.99, 0.999):
+        exact = float(np.quantile(xs, q))
+        assert h.quantile(q) == pytest.approx(exact, rel=0.08)
+    assert h.quantile(0.0) == pytest.approx(xs.min(), rel=0.05)
+    assert h.quantile(1.0) == pytest.approx(xs.max(), rel=0.05)
+
+
+def test_log_histogram_merge_is_exact():
+    rng = np.random.default_rng(4)
+    a, b = LogHistogram(), LogHistogram()
+    xa, xb = rng.exponential(0.05, 500), rng.exponential(0.5, 500)
+    for x in xa:
+        a.record(float(x))
+    for x in xb:
+        b.record(float(x))
+    whole = LogHistogram()
+    for x in np.concatenate([xa, xb]):
+        whole.record(float(x))
+    a.merge(b)
+    assert np.array_equal(a.counts, whole.counts)
+    assert a.count == whole.count and a.sum == pytest.approx(whole.sum)
+    assert a.quantile(0.99) == whole.quantile(0.99)
+
+
+def test_registry_labels_and_merge():
+    r = MetricsRegistry()
+    r.counter("gets", tenant="a").add(3)
+    r.counter("gets", tenant="b").add(2)
+    assert r.counter("gets", tenant="a").value == 3
+    r2 = MetricsRegistry()
+    r2.counter("gets", tenant="a").add(10)
+    r2.gauge("depth").set(5)
+    r.merge(r2)
+    col = r.collect()
+    assert col["gets{tenant=a}"]["value"] == 13
+    assert col["gets{tenant=b}"]["value"] == 2
+    assert col["depth"]["hwm"] == 5
+
+
+def test_metrics_observer_agrees_with_event_log(traced):
+    """The streaming sketches must agree with the exact event log they
+    summarize: counts exactly, quantiles within the bin bound."""
+    s, results = traced
+    durs = [info["dur"] for (_t, k, _q, _s, _ti, _rq, info)
+            in s.coord.event_log if k == "GET_DONE"]
+    col = s.metrics.registry.collect()
+    assert col["gets"]["value"] == len(durs)
+    h = s.metrics.registry.histogram("get_latency_s")
+    assert h.count == len(durs)
+    assert h.quantile(0.5) == pytest.approx(np.median(durs), rel=0.08)
+    assert col["queries"]["value"] == len(SPECS)
+    lat = s.metrics.registry.histogram("query_latency_s")
+    assert lat.max == pytest.approx(max(r.latency_s for r in results))
+    g = col["tasks_inflight"]
+    assert g["value"] == 0 and g["hwm"] > 0      # all tasks closed
+
+
+# ----------------------------------------------------------------- drift
+def _probe(n=14, seed=11):
+    s = Session(sf=SF, seed=seed, compute_scale=0, executor_workers=2,
+                record_events=True)
+    for _ in range(n):
+        s.submit(("q6", {"scan": 4}))
+    return s.coord.event_summary()
+
+
+def test_drift_null_silent_shift_flagged():
+    summ = _probe()
+    ref = calibrate(summ)
+    det = DriftDetector.from_summary(ref, summ, window=64, consecutive=2)
+    assert det.thresholds["get"] < 0.25      # seeded, not the fallback
+    live = Session(sf=SF, seed=23, compute_scale=0, executor_workers=2)
+    live.coord.attach_observer(det)
+    for _ in range(16):
+        live.submit(("q6", {"scan": 4}))
+    assert not det.flagged()                 # null: silent
+    assert det.reports                       # but it DID evaluate
+    shift_at = det.queries_seen
+    gm = live.coord.store.config.get_model
+    live.coord.store.config.get_model = dataclasses.replace(
+        gm, base_median_s=gm.base_median_s * 2.0)
+    for _ in range(12):
+        live.submit(("q6", {"scan": 4}))
+    flag = det.first_flag("get")
+    assert flag is not None and flag.flagged
+    assert flag.queries_seen - shift_at <= 6     # bounded detection lag
+    assert not det.flagged("put")            # the PUT side saw no shift
+
+
+def test_drift_stat_and_fit_helper():
+    fit = fit_request_samples(
+        [(1 << 20, 0.02 + i * 1e-4) for i in range(16)], S3_GET_MODEL)
+    assert fit.samples == 16
+    assert drift_stat(fit, fit, 1 << 20) == 0.0
+    ref = RequestFit(base_s=0.02, throughput_Bps=1e8, tail_s=0.0,
+                     samples=16)
+    doubled = dataclasses.replace(ref, base_s=ref.base_s * 2)
+    assert drift_stat(doubled, ref, 0) == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        DriftDetector(calibrate({}), window=2)
+
+
+# ------------------------------------------------- legacy recorder cap
+def test_max_events_cap_counts_drops():
+    s = Session(**OPTS, executor_workers=2, record_events=True,
+                max_events=30)
+    s.submit(("q1", {"scan": 3}))
+    assert len(s.coord.event_log) == 30
+    assert s.coord.dropped_events > 0
+    assert s.coord.event_summary()["dropped_events"] == \
+        s.coord.dropped_events
+    # uncapped twin sees cap + drops events in total, and the capped log
+    # is its prefix (drop-tail, not sampling); results were untouched
+    s2 = Session(**OPTS, executor_workers=2, record_events=True)
+    s2.submit(("q1", {"scan": 3}))
+    assert len(s2.coord.event_log) == 30 + s.coord.dropped_events
+    assert s2.coord.event_summary()["dropped_events"] == 0
+    assert s.coord.event_log == s2.coord.event_log[:30]
+
+
+# ------------------------------------------------------ rollups / report
+def test_columns_read_and_attr_totals_on_rollup(traced):
+    _, results = traced
+    classes = [QueryClass(q, 1.0, nt) for q, nt in SPECS]
+    wr = Session(**OPTS, executor_workers=2).run_mix(
+        classes, [0.0] * len(classes))
+    assert [r.columns_read for r in wr.records] == \
+        [r.columns_read for r in results]
+    assert wr.summary["columns_read_total"] == \
+        sum(r.columns_read for r in results) > 0
+    assert wr.summary["columns_read_mean"] == \
+        wr.summary["columns_read_total"] / len(wr.records)
+    assert wr.summary["attr_get_s_total"] == pytest.approx(
+        wr.summary["attr_get_s_mean"] * len(wr.records))
+    rep = wr.report()
+    assert json.loads(rep.to_json())["kind"] == "workload"
+
+
+def test_fleet_report_rollup():
+    s = Session(**OPTS, executor_workers=2)
+    streams = [
+        TenantStream.open_loop(TenantSpec("a", slot_quota=8), MIX, 3,
+                               mean_interarrival_s=2.0, seed=1),
+        TenantStream.open_loop(TenantSpec("b"), MIX, 3,
+                               mean_interarrival_s=2.0, seed=2),
+    ]
+    fr = s.run_fleet(streams)
+    rep = fr.report()
+    data = json.loads(rep.to_json())
+    assert data["kind"] == "fleet" and set(data["tenants"]) == {"a", "b"}
+    assert data["summary"]["queries"] == 6
+    assert data["tenants"]["a"]["quota_max_held"] <= 8
+    assert sum(c["queries"] for c in data["classes"].values()) == 6
+    txt = rep.to_text()
+    assert "per tenant:" in txt and "per query class:" in txt
+    # a metrics registry snapshot rides along when passed
+    assert "metrics" not in rep.data
+    assert "metrics" in fr.report(registry=MetricsRegistry()).data
