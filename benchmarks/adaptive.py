@@ -1,0 +1,227 @@
+"""Adaptive control plane benchmark (ROADMAP item 2; ISSUE 10).
+
+Three gated sections:
+
+  * **No-op parity** — the hard contract the whole subsystem rests on:
+    with no detector the controller IS one ``WorkloadDriver.run`` call,
+    and with a detector attached under the null (no shift, nothing
+    flagged) the segmented adaptive run is bit-identical to the frozen
+    unsegmented run, at executor widths {1, 8}. Asserted on the full
+    per-record signature (latency, queue delay, cost counters, columns).
+  * **Regime shift** — a mid-run 2x GET base-latency step (the same
+    injection ``benchmarks/obs.py`` gates detection on). The detector
+    flags, the controller re-probes on the shifted store, re-searches a
+    local grid, and swaps to the post-shift winner (pushdown OFF: one
+    whole-object GET beats two pushdown requests once base latency
+    dominates). Gates: deterministic flag query and swap index; adaptive
+    total cost INCLUDING the control-plane spend strictly below the
+    frozen twin at equal-or-better p99; bit-identical across widths.
+  * **Autoscaling** — per-segment ``max_parallel`` from the slot-queueing
+    wave model over the bursty on-off arrivals. Gates: the recorded
+    trace equals :func:`~repro.planner.adaptive.plan_max_parallel`'s
+    closed form exactly, and the provisioned-equivalent capacity
+    (sum of pool x segment duration) undercuts peak-sized fixed
+    provisioning. Serverless billing does not charge idle slots, so the
+    win is stated in provisioned-equivalent slot-seconds, the Fig-7
+    currency of ``workload.pricing``.
+
+Regression-gated via ``benchmarks/baselines/BENCH_adaptive.json``
+(``check_regression.py --suite adaptive``; key catalog in
+docs/BENCHMARKS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core.session import Session
+from repro.obs.drift import DriftDetector
+from repro.planner import (AdaptiveController, AutoscalePolicy, PlanConfig,
+                           calibrate, frozen_twin, plan_max_parallel)
+from repro.workload.arrivals import bursty
+from repro.workload.driver import WorkloadDriver
+from repro.workload.mix import TPCH_MIX, QueryClass, sample_mix
+
+SEED = 3                 # serving engine seed (matches benchmarks/obs.py)
+PROBE_SEED = 11          # reference-calibration probe seed
+N = 48                   # regime-shift workload size
+MEAN_IA = 1.2            # bursty mean inter-arrival (s)
+ARR_SEED = 7
+SHIFT_SEG = 2            # inject the GET step before this segment
+GET_SHIFT = 2.0          # base_median_s multiplier
+DRIFT_WINDOW = 64
+
+
+def _session(width: int = 8, **kw) -> Session:
+    return Session(sf=0.002, seed=SEED, compute_scale=0, max_parallel=16,
+                   executor_workers=width, **kw)
+
+
+def _sig(records):
+    return [(r.name, r.latency_s, r.queue_delay_s, r.cost.total,
+             r.cost.invocations, r.cost.gets, r.cost.puts, r.columns_read)
+            for r in records]
+
+
+def _detector() -> DriftDetector:
+    """Reference calibration + seeded thresholds from a dedicated probe
+    engine (same idiom as the obs drift gate)."""
+    probe = Session(sf=0.002, seed=PROBE_SEED, compute_scale=0,
+                    max_parallel=16, record_events=True)
+    for _ in range(14):
+        probe.submit(("q6", {"scan": 4}))
+    summ = probe.coord.event_summary()
+    return DriftDetector.from_summary(calibrate(summ), summ,
+                                      window=DRIFT_WINDOW, consecutive=2)
+
+
+def _shift_workload():
+    classes = [QueryClass("q6", 1.0, {"scan": 4})] * N
+    return classes, bursty(N, MEAN_IA, seed=ARR_SEED)
+
+
+def _shifter(session: Session):
+    def on_segment(k: int, t0: float):
+        if k == SHIFT_SEG:
+            gm = session.coord.store.config.get_model
+            session.coord.store.config.get_model = dataclasses.replace(
+                gm, base_median_s=gm.base_median_s * GET_SHIFT)
+    return on_segment
+
+
+def _twin(mode: str, width: int):
+    """One regime-shift run: 'adaptive' re-plans on the flag, 'frozen'
+    carries the identical segmentation, detector and injected shift but a
+    zero probe budget (``planner.adaptive.frozen_twin``)."""
+    classes, arr = _shift_workload()
+    session = _session(width)
+    kw = dict(target_query="q6", detector=_detector(),
+              on_segment=_shifter(session))
+    base_cfg = PlanConfig.make({"scan": 4})
+    ctl = AdaptiveController(session, base_cfg, **kw) if mode == "adaptive" \
+        else frozen_twin(session, base_cfg, **kw)
+    return ctl.run(classes, arr)
+
+
+def main(quick: bool = False):
+    # ------------------------------------------------------ no-op parity
+    n = 24
+    classes = sample_mix(TPCH_MIX, n, seed=5)
+    arr = bursty(n, 2.0, seed=ARR_SEED)
+    for width in (1, 8):
+        frozen = WorkloadDriver(_session(width).coord).run(classes, arr)
+        plain = AdaptiveController(_session(width)).run(classes, arr)
+        assert _sig(plain.records) == _sig(frozen.records), \
+            f"no-detector adaptive run differs from frozen (width {width})"
+        assert len(plain.segments) == 1 and not plain.swaps
+        nullrun = AdaptiveController(
+            _session(width), PlanConfig.make({"scan": 4}),
+            target_query="q6", detector=_detector()).run(classes, arr)
+        assert _sig(nullrun.records) == _sig(frozen.records), \
+            f"null-drift segmented run differs from frozen (width {width})"
+        assert not any(r.flagged for r in nullrun.reports), \
+            "null run must not flag"
+        assert not nullrun.swaps and nullrun.replans == 0
+    emit("adaptive_noop_parity_ok", 1.0,
+         "adaptive == frozen bit-identical under null drift, widths {1,8}")
+
+    # ------------------------------------------------------ regime shift
+    ad = _twin("adaptive", 8)
+    fz = _twin("frozen", 8)
+    flags = [r.queries_seen for r in ad.reports if r.flagged]
+    assert flags, "2x GET base-latency step must flag"
+    assert ad.swaps and ad.replans == 1 and ad.probes_used == 1, \
+        "exactly one re-plan must fire within the probe budget"
+    swap = ad.swaps[0]
+    assert not swap.to_config.pushdown, \
+        "post-shift winner should turn pushdown off (base-latency regime)"
+    assert not fz.swaps and fz.replans == 0, "frozen twin must not act"
+    assert _sig(ad.records[:swap.at_query]) == \
+        _sig(fz.records[:swap.at_query]), \
+        "records before the swap point must be identical in both twins " \
+        "(in-flight queries are never re-planned)"
+    emit("adaptive_flag_query", float(flags[0]),
+         f"first flagged DriftReport at this many queries seen "
+         f"(stat thresholds seeded from the probe, window={DRIFT_WINDOW})")
+    emit("adaptive_swap_at_query", float(swap.at_query),
+         f"config swap takes effect at this record index: "
+         f"{swap.from_id}->{swap.to_id} "
+         f"ntasks={swap.to_config.ntasks_dict} "
+         f"pushdown={swap.to_config.pushdown}")
+    a_cost = ad.total_cost_with_control
+    f_cost = fz.total_cost
+    a_p99 = ad.summary["latency_s_p99"]
+    f_p99 = fz.summary["latency_s_p99"]
+    assert a_cost < f_cost, \
+        f"adaptive (incl. control ${ad.control_cost_usd:.6f}) must beat " \
+        f"frozen on cost: ${a_cost:.6f} vs ${f_cost:.6f}"
+    assert a_p99 <= f_p99 + 1e-9, \
+        f"adaptive p99 {a_p99:.3f}s must not exceed frozen {f_p99:.3f}s"
+    emit("adaptive_cost_usd", a_cost,
+         f"adaptive workload cost incl. control plane "
+         f"(probe+search=${ad.control_cost_usd:.6f}); beats frozen")
+    emit("adaptive_frozen_cost_usd", f_cost,
+         f"frozen twin: same shift, same segments, no adaptation "
+         f"({(1 - a_cost / f_cost):.1%} saved)")
+    emit("adaptive_p99_s", a_p99,
+         f"pre-swap {ad.summary['by_config']['cfg0']['latency_s_p99']:.3f}s"
+         f" / post-swap "
+         f"{ad.summary['by_config'][swap.to_id]['latency_s_p99']:.3f}s "
+         f"(summarize by_config split)")
+    emit("adaptive_frozen_p99_s", f_p99, "frozen twin p99 under the shift")
+    emit("adaptive_control_cost_usd", ad.control_cost_usd,
+         f"probe ${swap.probe_cost_usd:.6f} + {swap.search_evals} "
+         f"confirmations ${swap.search_cost_usd:.6f}")
+
+    # width parity: the whole adaptive pipeline, swap point included
+    ad1 = _twin("adaptive", 1)
+    assert _sig(ad1.records) == _sig(ad.records), \
+        "adaptive records differ across executor widths {1, 8}"
+    assert ad1.swaps[0].at_query == swap.at_query and \
+        ad1.swaps[0].to_config == swap.to_config, \
+        "swap decision differs across executor widths {1, 8}"
+    emit("adaptive_width_parity_ok", 1.0,
+         "records + swap decision bit-identical for widths 1 and 8")
+
+    # ------------------------------------------------------- autoscaling
+    classes, arr = _shift_workload()
+    policy = AutoscalePolicy(window_s=4.0, target_waves=2, floor=4,
+                             cap=64)
+    session = _session(8)
+    auto = AdaptiveController(session, autoscale=policy).run(classes, arr)
+    # the recorded trace must equal the wave model's closed form exactly
+    for seg in auto.segments:
+        want = plan_max_parallel(
+            arr[seg.start:seg.stop],
+            policy.demand_per_query(classes[seg.start:seg.stop]),
+            window_s=policy.window_s, target_waves=policy.target_waves,
+            floor=policy.floor, cap=policy.cap)
+        assert seg.max_parallel == want, \
+            f"segment {seg.index} pool {seg.max_parallel} != closed " \
+            f"form {want}"
+    trace = auto.max_parallel_trace
+    peak = max(trace)
+    # provisioned-equivalent slot-seconds: peak-sized fixed pool over the
+    # whole run vs the per-segment pools over their own spans
+    end = max(r.finish_s for r in auto.records)
+    starts = [s.t0 for s in auto.segments] + [end]
+    spans = [max(starts[i + 1] - starts[i], 0.0)
+             for i in range(len(auto.segments))]
+    fixed = peak * sum(spans)
+    scaled = sum(m * d for m, d in zip(trace, spans))
+    ratio = scaled / fixed
+    assert ratio < 1.0, \
+        "autoscaled provisioned-equivalent capacity must undercut a " \
+        "peak-sized fixed pool"
+    emit("adaptive_autoscale_peak_parallel", float(peak),
+         f"wave-model pool trace {trace} over {len(trace)} segments "
+         "(matches plan_max_parallel closed form exactly)")
+    emit("adaptive_autoscale_provisioned_ratio", ratio,
+         f"slot-seconds vs peak-sized fixed pool: {scaled:.1f} / "
+         f"{fixed:.1f}")
+    emit("adaptive_autoscale_p99_s", auto.summary["latency_s_p99"],
+         "latency p99 under per-burst pools (regression-gated)")
+
+
+if __name__ == "__main__":
+    main()

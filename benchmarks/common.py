@@ -19,7 +19,7 @@ BENCH_MODULES = [
     "parallel_reads", "straggler_cdf", "stragglers", "shuffle_cost",
     "query_latency", "cost_of_operation", "scalability", "concurrency",
     "workload", "breakeven", "tunable", "planner", "optimizations",
-    "roofline", "scan_pushdown", "faults", "tenancy", "obs",
+    "roofline", "scan_pushdown", "faults", "tenancy", "obs", "adaptive",
 ]
 
 # gated regression suites (benchmarks/check_regression.py): ``prefixes``
@@ -117,6 +117,25 @@ SUITES = {
             "tenancy_fleet_queries",
             "tenancy_fleet_makespan_s",
             "tenancy_fleet_rejected",
+        ],
+    },
+    "adaptive": {
+        "baseline": "benchmarks/baselines/BENCH_adaptive.json",
+        "refresh_only": "adaptive",
+        "prefixes": ("adaptive_",),
+        "keys": [
+            "adaptive_noop_parity_ok",
+            "adaptive_flag_query",
+            "adaptive_swap_at_query",
+            "adaptive_cost_usd",
+            "adaptive_frozen_cost_usd",
+            "adaptive_p99_s",
+            "adaptive_frozen_p99_s",
+            "adaptive_control_cost_usd",
+            "adaptive_width_parity_ok",
+            "adaptive_autoscale_peak_parallel",
+            "adaptive_autoscale_provisioned_ratio",
+            "adaptive_autoscale_p99_s",
         ],
     },
     "obs": {

@@ -33,7 +33,8 @@ import functools
 from benchmarks.common import emit
 from repro.core.engine import make_engine
 from repro.planner import (PlanConfig, QueryEvaluator, QueryModel,
-                           pareto_search, select, select_for_workload)
+                           adaptive_shuffle_menu, pareto_search, select,
+                           select_for_workload)
 from repro.workload import (TPCH_MIX, WorkloadDriver, retune, sample_mix,
                             uniform)
 
@@ -49,8 +50,16 @@ WL_LIMIT = 8               # shared slot pool for the workload runs
 # paper's Fig-9 crossover regime, so the joins here stay large on purpose
 MS_TARGET_BYTES = 8_000
 MS_JOINS = (48, 64)
-MS_SHUFFLES = (("single",), ("multi", 8, 4), ("multi", 8, 8),
-               ("multi", 16, 8))
+
+
+def ms_shuffles(nt: int, producers: int) -> tuple[tuple, ...]:
+    """Per-join-count shuffle menu from ``choose_strategy``'s cost-argmin
+    neighbourhood (``planner.adaptive.adaptive_shuffle_menu``) — replaces
+    the old hand-fixed divisor list: candidates now track the §4.2
+    request-cost landscape of THIS (producers, consumers) pair instead of
+    whatever divisors once looked reasonable. ``producers`` is the live
+    engine's lineitem split count (the shuffle's map-side object count)."""
+    return adaptive_shuffle_menu(producers, nt)
 
 
 def _grid(quick: bool):
@@ -146,8 +155,9 @@ def build_multishuffle_search(sf: float, width: int):
     ev = QueryEvaluator(coord.store, coord.base_splits, "q12", seed=SEED,
                         max_parallel=coord.max_parallel,
                         executor_workers=width)
+    producers = len(coord.base_splits["lineitem"])
     grid = [PlanConfig.make({"join": nt}, shuffle=sh)
-            for nt in MS_JOINS for sh in MS_SHUFFLES]
+            for nt in MS_JOINS for sh in ms_shuffles(nt, producers)]
     must = tuple(PlanConfig.make({"join": nt}, shuffle=("single",))
                  for nt in MS_JOINS)
     sr = pareto_search(model, ev, grid, must_confirm=must)

@@ -542,12 +542,19 @@ class Coordinator:
                     arrival_times: list[float] | None = None,
                     after: list[tuple[int, float] | None] | None = None,
                     tenants: list | None = None,
+                    max_parallel: int | None = None,
                     ) -> list[QueryResult]:
         """Run several queries against ONE shared invocation-slot pool.
 
         ``arrival_times[i]`` offsets query i's root stages in virtual time
         (paper §6.5: concurrent streams contend for the account-level
         parallel-invocation limit). Results keep the order of ``plans``.
+
+        ``max_parallel`` overrides the account-level invocation limit for
+        THIS call only (planner-driven autoscaling: the adaptive control
+        plane requests per-burst concurrency from the slot-queueing wave
+        model — ``planner.adaptive``). ``None`` keeps the constructor's
+        limit, bit-identical to earlier engines.
 
         ``after[i] = (j, think_s)`` makes query i *closed-loop*: it arrives
         exactly ``think_s`` virtual seconds after query j finishes (j < i),
@@ -618,12 +625,14 @@ class Coordinator:
                 run.outcols[stage.st["name"]] = [0] * stage.n
             runs.append(run)
 
+        n_slots = self.max_parallel if max_parallel is None \
+            else max(int(max_parallel), 1)
         open_loop = [a for a, dep in zip(arrivals, afters) if dep is None]
         # slot = (free_t, sid); the sid gives each slot a warm-pool identity
         # without changing which free time is popped (bit-identical multiset)
-        slots = [(min(open_loop), i) for i in range(self.max_parallel)]
+        slots = [(min(open_loop), i) for i in range(n_slots)]
         heapq.heapify(slots)
-        virgin = set(range(self.max_parallel)) if self.coldstart else set()
+        virgin = set(range(n_slots)) if self.coldstart else set()
         events = EventQueue()           # (t, kind, ridx, sidx, tidx, rq)
         pending: deque[tuple[int, int, int]] = deque()   # tasks w/o a slot
         outstanding: dict = {}                # future -> (run, stage, tidx)

@@ -66,9 +66,16 @@ class QuerySpec:
 
     def build_plan(self) -> dict:
         """The one canonical plan-building path (every tuning form
-        normalized through ``planner.model.coerce_config``)."""
+        normalized through ``planner.model.coerce_config``). The config's
+        §3.2 ``pushdown`` toggle lands on the plan itself (a coordinator
+        key, not a builder kwarg), so a planner pick that turns pushdown
+        off flows through this path exactly as through the search's
+        ``QueryEvaluator``."""
         cfg, kw = coerce_config(self.tuning, self.plan_kw)
-        return QUERIES[self.query](cfg.ntasks_dict or None, **kw)
+        pushdown = kw.pop("pushdown", getattr(cfg, "pushdown", True))
+        plan = QUERIES[self.query](cfg.ntasks_dict or None, **kw)
+        plan["pushdown"] = bool(pushdown)
+        return plan
 
 
 class Session:
@@ -142,18 +149,38 @@ class Session:
         from repro.workload.tenancy import run_fleet
         return run_fleet(self, streams, mode=mode, **kw)
 
+    # ------------------------------------------------------- adaptivity
+    def swap_config(self, config):
+        """Swap the live engine's I/O policy to ``config``'s (a planner
+        ``PlanConfig``): parallel_reads, RSM/WSM, backup tasks and
+        doublewrite take effect for every SUBSEQUENT run on this session —
+        the adaptive control plane's mid-run config-swap seam
+        (``planner.adaptive``). Queries already submitted are untouched
+        (each ``run_queries`` call reads the policy it started with).
+        Returns the previous policy so a caller can restore it."""
+        old = self.coord.policy
+        self.coord.policy = config.policy(old)
+        return old
+
     # ----------------------------------------------------------- failover
-    def spawn(self, journal=None) -> Coordinator:
+    def spawn(self, journal=None, *, record_events: bool | None = None
+              ) -> Coordinator:
         """A fresh coordinator over this session's SAME store and base
         splits (the §3 failover story: the store survives the
         coordinator). Scheduling options are copied from the current
-        coordinator, so the replacement replays bit-identically."""
+        coordinator, so the replacement replays bit-identically.
+
+        ``record_events`` overrides the copied event-recording flag — the
+        adaptive control plane re-probes on a spawned coordinator that
+        MUST record events even when the serving engine does not
+        (``QueryModel.from_probe`` needs the request-level log)."""
         c = self.coord
         return Coordinator(
             c.store, c.base_splits, c.policy, seed=c.seed,
             max_parallel=c.max_parallel, compute_scale=c.compute_scale,
             executor_workers=c.executor_workers,
-            record_events=c.event_log is not None,
+            record_events=c.event_log is not None
+            if record_events is None else record_events,
             max_events=c.max_events, faults=c.faults,
             coldstart=c.coldstart, retry=c.retry, journal=journal)
 

@@ -81,7 +81,8 @@ class DriftDetector:
 
     def __init__(self, reference: Calibration, *, window: int = 192,
                  thresholds: dict[str, float] | None = None,
-                 margin: float = 3.0, consecutive: int = 2):
+                 margin: float = 3.0, consecutive: int = 2,
+                 on_report=None):
         if window < MIN_SAMPLES:
             raise ValueError(f"window {window} < MIN_SAMPLES "
                              f"{MIN_SAMPLES}")
@@ -92,6 +93,13 @@ class DriftDetector:
         self.thresholds = {"get": DEFAULT_THRESHOLD,
                            "put": DEFAULT_THRESHOLD,
                            **(thresholds or {})}
+        # report -> action hook (the adaptive control plane,
+        # planner.adaptive): called with every DriftReport as it is
+        # appended, flagged or not. The callback runs inside the
+        # coordinator's event loop, so it must only RECORD state — never
+        # run queries or otherwise perturb virtual time; act on what it
+        # recorded after the run returns (see AdaptiveController).
+        self.on_report = on_report
         self.queries_seen = 0
         self.reports: list[DriftReport] = []
         self._buf = {"get": [], "put": []}      # rolling (nbytes, dur)
@@ -154,10 +162,13 @@ class DriftDetector:
             self._over[side] = self._over[side] + 1 if stat > thr else 0
             flagged = self._over[side] >= self.consecutive
             self._flagged[side] = self._flagged[side] or flagged
-            self.reports.append(DriftReport(
+            report = DriftReport(
                 side=side, t=t, queries_seen=self.queries_seen,
                 window=len(buf), stat=stat, threshold=thr,
-                flagged=flagged, fit=fit, reference=ref))
+                flagged=flagged, fit=fit, reference=ref)
+            self.reports.append(report)
+            if self.on_report is not None:
+                self.on_report(report)
 
     # --------------------------------------------------------- verdicts
     def flagged(self, side: str | None = None) -> bool:

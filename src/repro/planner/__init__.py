@@ -26,6 +26,16 @@ Module map (paper anchors):
     (coordinate descent over per-stage DoP, lanes, shuffle p/f splits and
     mitigation toggles; simulator confirmation of frontier candidates
     only) with an auditable pruned-point log.
+  * :mod:`repro.planner.adaptive` — ROADMAP item 2: the ONLINE planner.
+    ``AdaptiveController`` closes the detect -> re-probe -> refit ->
+    re-search -> swap loop over a live Session: drift flags
+    (``obs.drift``) trigger a bounded re-probe and a local re-search, and
+    a strictly cheaper SLA-feasible pick swaps in at a deterministic
+    segment boundary; planner-driven autoscaling sizes the slot pool per
+    burst from the wave model; ``adaptive_shuffle_menu`` derives §4.2
+    (p, f) candidates from ``choose_strategy``'s cost-argmin
+    neighbourhood. No-op parity contract: with no detector (or under the
+    null) the adaptive path is bit-identical to the frozen one.
   * :mod:`repro.planner.sla` — §6 SLA discussion / ROADMAP: cheapest
     config whose simulator-confirmed latency (or workload p99) meets a
     target, with the model's agreement recorded; wires into
@@ -40,6 +50,12 @@ bit-identical frontier for any executor width. See
 ``docs/ARCHITECTURE.md`` for the calibrate -> model -> search -> sla
 pipeline in detail.
 """
+from repro.planner.adaptive import (AdaptiveController, AdaptiveResult,
+                                    AutoscalePolicy, SegmentInfo, SwapEvent,
+                                    adaptive_shuffle_menu, auto_gap_s,
+                                    default_regrid, frozen_twin,
+                                    plan_max_parallel, segment_indices,
+                                    shuffle_divisor_pairs)
 from repro.planner.calibrate import Calibration, RequestFit, calibrate
 from repro.planner.model import (PlanConfig, Prediction, QueryModel,
                                  coerce_config)
@@ -51,6 +67,10 @@ from repro.planner.sla import (SLAChoice, WorkloadSLAChoice, choice_spec,
                                select, select_for_workload, sla_breakeven)
 
 __all__ = [
+    "AdaptiveController", "AdaptiveResult", "AutoscalePolicy",
+    "SegmentInfo", "SwapEvent", "adaptive_shuffle_menu", "auto_gap_s",
+    "default_regrid", "frozen_twin", "plan_max_parallel",
+    "segment_indices", "shuffle_divisor_pairs",
     "Calibration", "RequestFit", "calibrate",
     "PlanConfig", "Prediction", "QueryModel", "coerce_config",
     "FrontierPoint", "QueryEvaluator", "SCALAR_AXES", "SearchResult",

@@ -59,6 +59,11 @@ class QueryRecord:
     # admission control rejected the query outright (ran nothing)
     tenant: str = ""
     rejected: bool = False
+    # adaptive control plane (planner.adaptive): which active PlanConfig
+    # this query was planned under — "" outside adaptive runs. A mid-run
+    # config swap is auditable record by record, and ``summarize`` splits
+    # the latency percentiles per config id when a run carries several.
+    config_id: str = ""
 
     @property
     def finish_s(self) -> float:
@@ -135,6 +140,29 @@ def summarize(records: list[QueryRecord], makespan_s: float) -> dict:
     # §3.2 pushdown rollup: column segments fetched across the workload
     out["columns_read_total"] = int(sum(r.columns_read for r in records))
     out["columns_read_mean"] = out["columns_read_total"] / n
+    # adaptive control plane: a run that swapped configs mid-flight
+    # carries >1 config_id — split the served-latency percentiles and the
+    # cost per config so pre-swap vs post-swap regimes are separable
+    # (failed/rejected queries stay excluded, exactly as above)
+    cids = sorted({r.config_id for r in records if r.config_id})
+    if len(cids) > 1:
+        by = {}
+        for cid in cids:
+            sub = [r for r in records if r.config_id == cid]
+            sub_ok = [r for r in sub if not r.failed and not r.rejected]
+            xs = np.asarray([r.latency_s for r in sub_ok], np.float64)
+            entry = {"queries": len(sub),
+                     "total_cost": float(sum(r.dollars for r in sub)),
+                     "failed": int(sum(r.failed for r in sub)),
+                     "rejected": int(sum(r.rejected for r in sub))}
+            entry["cost_per_query"] = entry["total_cost"] / max(len(sub),
+                                                                1)
+            if len(xs):
+                entry["latency_s_mean"] = float(xs.mean())
+                for q in (50, 90, 99):
+                    entry[f"latency_s_p{q}"] = float(np.percentile(xs, q))
+            by[cid] = entry
+        out["by_config"] = by
     return out
 
 
@@ -145,11 +173,19 @@ class WorkloadDriver:
         self.coord = coord
 
     def run(self, classes: list[QueryClass],
-            arrivals: list[float] | ClosedLoop) -> WorkloadResult:
+            arrivals: list[float] | ClosedLoop, *,
+            config_id: str = "",
+            max_parallel: int | None = None) -> WorkloadResult:
         """``arrivals`` is either absolute arrival times (open loop, same
         length as ``classes``) or a :class:`ClosedLoop` spec whose
         ``streams * queries_per_stream`` must equal ``len(classes)``
-        (stream-major order)."""
+        (stream-major order).
+
+        ``config_id`` labels every record of this call with the active
+        planner config (adaptive runs stitch several labelled calls into
+        one result); ``max_parallel`` forwards the per-call slot-pool
+        override (planner-driven autoscaling). The defaults leave both
+        paths exactly as before."""
         if isinstance(arrivals, ClosedLoop):
             if arrivals.total != len(classes):
                 raise ValueError(f"{len(classes)} classes but closed loop "
@@ -161,8 +197,10 @@ class WorkloadDriver:
                                  f"{len(arrivals)} arrival times")
             arrival_times, after = list(arrivals), None
         plans = [c.build_plan() for c in classes]
-        results = self.coord.run_queries(plans, arrival_times, after=after)
-        records = [self._record(i, res) for i, res in enumerate(results)]
+        results = self.coord.run_queries(plans, arrival_times, after=after,
+                                         max_parallel=max_parallel)
+        records = [self._record(i, res, config_id)
+                   for i, res in enumerate(results)]
         makespan = 0.0 if not records else \
             max(r.finish_s for r in records) - min(r.arrival_s
                                                    for r in records)
@@ -170,7 +208,8 @@ class WorkloadDriver:
                               summarize(records, makespan))
 
     @staticmethod
-    def _record(i: int, res: QueryResult) -> QueryRecord:
+    def _record(i: int, res: QueryResult,
+                config_id: str = "") -> QueryRecord:
         return QueryRecord(i, res.name, res.arrival_s, res.queue_delay_s,
                            res.latency_s, res.cost, res.task_count,
                            res.backup_count, res.backup_slot_s,
@@ -178,4 +217,4 @@ class WorkloadDriver:
                            columns_read=res.columns_read,
                            failed=res.failed,
                            fail_reason=res.fail_reason, tenant=res.tenant,
-                           rejected=res.rejected)
+                           rejected=res.rejected, config_id=config_id)

@@ -33,7 +33,17 @@ class QueryClass:
             raise ValueError("weight must be non-negative")
 
     def build_plan(self) -> dict:
-        return QUERIES[self.query](self.ntasks, **(self.plan_kw or {}))
+        """Build this class's plan. ``plan_kw`` may carry one reserved
+        key, ``"pushdown"`` — a coordinator plan flag (§3.2), not a
+        builder kwarg — which lands on the plan dict itself so a planner
+        pick that disables pushdown flows through the workload path
+        (``retune`` injects it from a ``PlanConfig``)."""
+        kw = dict(self.plan_kw or {})
+        pushdown = kw.pop("pushdown", None)
+        plan = QUERIES[self.query](self.ntasks, **kw)
+        if pushdown is not None:
+            plan["pushdown"] = bool(pushdown)
+        return plan
 
 
 # Scaled-down default: Q1/Q6 dominate (cheap scan-aggregates, the bulk of
@@ -76,6 +86,9 @@ def retune(mix, overrides: dict) -> tuple[QueryClass, ...]:
             out.append(c)
             continue
         cfg, kw = coerce_config(overrides[c.query])
+        if not getattr(cfg, "pushdown", True):
+            # only inject when OFF: default-True mixes stay byte-identical
+            kw = {**kw, "pushdown": False}
         nt = cfg.ntasks_dict
         out.append(dataclasses.replace(
             c, ntasks={**(c.ntasks or {}), **nt},

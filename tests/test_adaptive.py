@@ -1,0 +1,358 @@
+"""Adaptive control plane (planner.adaptive; ROADMAP item 2).
+
+The subsystem's hard contract is proven here test-first: with drift
+disabled — or with a detector attached but nothing flagged — the
+adaptive path is bit-identical to the frozen-planner path at executor
+widths {1, 8}. On top of that: deterministic swap points, the in-flight
+no-re-plan guarantee, probe-budget enforcement, the wave-model
+autoscaling closed form, the adaptive (p, f) menu's argmin containment
+(hypothesis property), per-record config ids in ``summarize``, and a
+seed-sweep false-positive guard on the drift detector under the null.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.session import Session
+from repro.core.shuffle import multi_stage
+from repro.faults import ColdStartConfig
+from repro.obs.drift import DriftDetector
+from repro.planner import (AdaptiveController, AutoscalePolicy, PlanConfig,
+                           adaptive_shuffle_menu, calibrate, frozen_twin,
+                           plan_max_parallel, segment_indices,
+                           shuffle_divisor_pairs)
+from repro.workload.arrivals import bursty
+from repro.workload.driver import QueryRecord, WorkloadDriver, summarize
+from repro.workload.mix import TPCH_MIX, QueryClass, retune, sample_mix
+
+SF = 0.002
+SEED = 3
+
+
+def _session(width=8, **kw):
+    return Session(sf=SF, seed=SEED, compute_scale=0, max_parallel=16,
+                   executor_workers=width, **kw)
+
+
+def _sig(records):
+    return [(r.name, r.latency_s, r.queue_delay_s, r.cost.total,
+             r.cost.invocations, r.cost.gets, r.cost.puts, r.columns_read)
+            for r in records]
+
+
+@pytest.fixture(scope="module")
+def probe_summary():
+    """One reference probe (obs idiom): 14x q6 on a dedicated engine."""
+    probe = Session(sf=SF, seed=11, compute_scale=0, max_parallel=16,
+                    record_events=True)
+    for _ in range(14):
+        probe.submit(("q6", {"scan": 4}))
+    return probe.coord.event_summary()
+
+
+def _detector(summary):
+    return DriftDetector.from_summary(calibrate(summary), summary,
+                                      window=64, consecutive=2)
+
+
+def _mixed_workload(n=24):
+    return sample_mix(TPCH_MIX, n, seed=5), bursty(n, 2.0, seed=7)
+
+
+def _q6_workload(n=48):
+    return [QueryClass("q6", 1.0, {"scan": 4})] * n, bursty(n, 1.2, seed=7)
+
+
+def _shifter(session, at_segment=2, factor=2.0):
+    def on_segment(k, t0):
+        if k == at_segment:
+            gm = session.coord.store.config.get_model
+            session.coord.store.config.get_model = dataclasses.replace(
+                gm, base_median_s=gm.base_median_s * factor)
+    return on_segment
+
+
+@pytest.fixture(scope="module")
+def shift_twins(probe_summary):
+    """One adaptive and one frozen regime-shift run (width 8), shared by
+    the assertions below — the runs are deterministic, so sharing them is
+    free of cross-test coupling."""
+    out = {}
+    for mode in ("adaptive", "frozen"):
+        classes, arr = _q6_workload()
+        s = _session()
+        kw = dict(target_query="q6", detector=_detector(probe_summary),
+                  on_segment=_shifter(s))
+        base = PlanConfig.make({"scan": 4})
+        ctl = AdaptiveController(s, base, **kw) if mode == "adaptive" \
+            else frozen_twin(s, base, **kw)
+        out[mode] = ctl.run(classes, arr)
+    return out
+
+
+# ------------------------------------------------------- no-op parity
+
+@pytest.mark.parametrize("width", [1, 8])
+def test_no_detector_is_one_frozen_run(width):
+    classes, arr = _mixed_workload()
+    frozen = WorkloadDriver(_session(width).coord).run(classes, arr)
+    ad = AdaptiveController(_session(width)).run(classes, arr)
+    assert _sig(ad.records) == _sig(frozen.records)
+    assert len(ad.segments) == 1 and not ad.swaps and ad.replans == 0
+
+
+@pytest.mark.parametrize("width", [1, 8])
+def test_null_drift_bit_identical_to_frozen(width, probe_summary):
+    """THE contract: detector attached, nothing flagged -> the segmented
+    adaptive run reproduces the frozen run bit for bit."""
+    classes, arr = _mixed_workload()
+    frozen = WorkloadDriver(_session(width).coord).run(classes, arr)
+    ad = AdaptiveController(
+        _session(width), PlanConfig.make({"scan": 4}), target_query="q6",
+        detector=_detector(probe_summary)).run(classes, arr)
+    assert len(ad.segments) > 1, "bursty arrivals must segment"
+    assert _sig(ad.records) == _sig(frozen.records)
+    assert not any(r.flagged for r in ad.reports)
+    assert not ad.swaps and ad.replans == 0 and ad.probes_used == 0
+    assert ad.control_cost_usd == 0.0
+
+
+def test_null_records_keep_base_config_id(probe_summary):
+    classes, arr = _mixed_workload()
+    ad = AdaptiveController(
+        _session(), PlanConfig.make({"scan": 4}), target_query="q6",
+        detector=_detector(probe_summary)).run(classes, arr)
+    assert {r.config_id for r in ad.records} == {"cfg0"}
+    assert "by_config" not in ad.summary     # single config: no split
+
+
+# ------------------------------------------------------ acting on drift
+
+def test_shift_flags_then_swaps_deterministically(shift_twins,
+                                                  probe_summary):
+    ad = shift_twins["adaptive"]
+    assert any(r.flagged for r in ad.reports)
+    assert len(ad.swaps) == 1 and ad.replans == 1 and ad.probes_used == 1
+    swap = ad.swaps[0]
+    # the swap point is a segment boundary: a pure function of the
+    # arrival schedule, so a re-run reproduces it exactly
+    classes, arr = _q6_workload()
+    s = _session()
+    ctl = AdaptiveController(s, PlanConfig.make({"scan": 4}),
+                             target_query="q6",
+                             detector=_detector(probe_summary),
+                             on_segment=_shifter(s))
+    again = ctl.run(classes, arr)
+    assert again.swaps[0].at_query == swap.at_query
+    assert again.swaps[0].to_config == swap.to_config
+    assert swap.at_query in [seg.start for seg in ad.segments]
+    # post-shift regime: base latency dominates, so the winner drops
+    # pushdown (one whole-object GET instead of two pushdown requests)
+    assert not swap.to_config.pushdown
+    assert _sig(again.records) == _sig(ad.records)
+
+
+def test_in_flight_queries_never_replanned(shift_twins):
+    ad, fz = shift_twins["adaptive"], shift_twins["frozen"]
+    swap = ad.swaps[0]
+    assert _sig(ad.records[:swap.at_query]) == \
+        _sig(fz.records[:swap.at_query])
+    assert all(r.config_id == "cfg0" for r in ad.records[:swap.at_query])
+    assert all(r.config_id == swap.to_id
+               for r in ad.records[swap.at_query:])
+    # and the swap paid off: cheaper including the control-plane spend,
+    # at equal-or-better p99
+    assert ad.total_cost_with_control < fz.total_cost
+    assert ad.summary["latency_s_p99"] <= fz.summary["latency_s_p99"]
+
+
+def test_probe_budget_respected(shift_twins, probe_summary):
+    assert shift_twins["frozen"].probes_used == 0      # budget 0
+    assert shift_twins["frozen"].replans == 0
+    # drift persists after the single allowed re-plan, but the budget is
+    # spent — no further probes fire
+    ad = shift_twins["adaptive"]
+    assert ad.probes_used == 1 and ad.replans == 1
+    classes, arr = _q6_workload()
+    s = _session()
+    ctl = AdaptiveController(s, PlanConfig.make({"scan": 4}),
+                             target_query="q6", probe_budget=3,
+                             detector=_detector(probe_summary),
+                             on_segment=_shifter(s))
+    r = ctl.run(classes, arr)
+    assert r.probes_used <= 3
+
+
+def test_summary_splits_percentiles_by_config(shift_twins):
+    ad = shift_twins["adaptive"]
+    by = ad.summary["by_config"]
+    swap = ad.swaps[0]
+    assert set(by) == {"cfg0", swap.to_id}
+    assert by["cfg0"]["queries"] == swap.at_query
+    assert by[swap.to_id]["queries"] == len(ad.records) - swap.at_query
+    total = sum(e["total_cost"] for e in by.values())
+    assert math.isclose(total, ad.total_cost, rel_tol=1e-12)
+    assert {"latency_s_p50", "latency_s_p99"} <= set(by["cfg0"])
+
+
+def test_coldstart_segmentation_refused(probe_summary):
+    classes, arr = _mixed_workload()
+    s = _session(coldstart=ColdStartConfig())
+    ctl = AdaptiveController(s, PlanConfig.make({"scan": 4}),
+                             target_query="q6",
+                             detector=_detector(probe_summary))
+    with pytest.raises(ValueError, match="cold-start"):
+        ctl.run(classes, arr)
+
+
+def test_swap_config_policy_seam():
+    s = _session()
+    old = s.coord.policy
+    cfg = PlanConfig(parallel_reads=4, rsm=False, backup_tasks=False)
+    prev = s.swap_config(cfg)
+    assert prev is old
+    assert s.coord.policy.parallel_reads == 4
+    assert not s.coord.policy.rsm.enabled
+    assert not s.coord.policy.backup_tasks
+    s.coord.policy = prev                  # restore
+
+
+# ---------------------------------------------------------- autoscaling
+
+def test_autoscale_trace_matches_wave_model():
+    classes, arr = _q6_workload()
+    policy = AutoscalePolicy(window_s=4.0, target_waves=2, floor=4,
+                             cap=64)
+    auto = AdaptiveController(_session(),
+                              autoscale=policy).run(classes, arr)
+    assert len(auto.segments) > 1
+    for seg in auto.segments:
+        want = plan_max_parallel(
+            arr[seg.start:seg.stop],
+            policy.demand_per_query(classes[seg.start:seg.stop]),
+            window_s=4.0, target_waves=2, floor=4, cap=64)
+        assert seg.max_parallel == want
+
+
+def test_plan_max_parallel_closed_form():
+    # 3 arrivals inside one 1s window, 8 tasks each, 2 waves -> 12 slots
+    assert plan_max_parallel([0.0, 0.1, 0.2, 10.0], 8,
+                             window_s=1.0, target_waves=2) == 12
+    # floor and cap clamp
+    assert plan_max_parallel([0.0], 1, window_s=1.0, target_waves=2,
+                             floor=6) == 6
+    assert plan_max_parallel([0.0] * 100, 8, window_s=1.0,
+                             target_waves=1, cap=32) == 32
+    # guarantee: a pool of the returned size serves the peak burst in at
+    # most target_waves waves
+    for tw in (1, 2, 3):
+        demand = 7 * 5
+        m = plan_max_parallel([0.0] * 7, 5, window_s=1.0, target_waves=tw,
+                              cap=10_000)
+        assert math.ceil(demand / m) <= tw
+    assert plan_max_parallel([], 8) == 1
+
+
+def test_segment_indices_cut_on_gaps():
+    assert segment_indices([0.0, 1.0, 9.0, 9.5, 30.0], 5.0) == [0, 2, 4]
+    assert segment_indices([0.0, 1.0, 2.0], 5.0) == [0]
+    assert segment_indices([], 5.0) == []
+
+
+# --------------------------------------------- adaptive (p, f) gridding
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=2, max_value=256),
+       st.integers(min_value=2, max_value=128))
+def test_menu_contains_exhaustive_grid_argmin(s, r):
+    """The adaptive menu always contains the request-cost argmin of the
+    exhaustive divisor grid over the same combiner counts."""
+    combiners = tuple(sorted({max(r // 2, 1), r}))
+    menu = adaptive_shuffle_menu(s, r, combiners=combiners)
+    grid = [(a, b) for c in combiners
+            for a, b in shuffle_divisor_pairs(c, s, r)]
+    if not grid:
+        assert menu == (("single",),)
+        return
+    best = min(grid, key=lambda ab: (
+        multi_stage(s, r, 1.0 / ab[0], 1.0 / ab[1]).request_cost(), ab))
+    assert ("multi", *best) in menu
+    assert menu[0] == ("single",)
+
+
+# ------------------------------------- config_id threading / summarize
+
+def _rec(i, cid="", failed=False, rejected=False, lat=1.0, cost=None):
+    from repro.core.cost import QueryCost
+    cost = cost if cost is not None else QueryCost(0.0, 0, 0, 0)
+    return QueryRecord(i, "q6", 0.0, 0.0, lat, cost, 1, 0, 0.0,
+                       config_id=cid, failed=failed, rejected=rejected)
+
+
+def test_driver_threads_config_id():
+    classes, arr = _mixed_workload(6)
+    wr = WorkloadDriver(_session().coord).run(classes, arr,
+                                              config_id="cfgX")
+    assert all(r.config_id == "cfgX" for r in wr.records)
+    assert "by_config" not in wr.summary    # one id: no split emitted
+
+
+def test_summarize_by_config_excludes_failed_and_rejected():
+    records = ([_rec(i, "cfg0", lat=1.0) for i in range(4)]
+               + [_rec(4, "cfg0", failed=True, lat=50.0)]
+               + [_rec(i, "cfg1", lat=2.0) for i in range(5, 9)]
+               + [_rec(9, "cfg1", rejected=True, lat=50.0)])
+    out = summarize(records, 10.0)
+    # the workload-level percentiles already exclude failed/rejected
+    assert out["latency_s_p99"] < 3.0
+    by = out["by_config"]
+    assert by["cfg0"]["queries"] == 5 and by["cfg0"]["failed"] == 1
+    assert by["cfg1"]["queries"] == 5 and by["cfg1"]["rejected"] == 1
+    # ... and so do the per-config splits: the 50s outliers never leak
+    assert by["cfg0"]["latency_s_p99"] == pytest.approx(1.0)
+    assert by["cfg1"]["latency_s_p99"] == pytest.approx(2.0)
+
+
+def test_pushdown_threads_through_workload_path():
+    # retune with a pushdown-off config injects the reserved plan_kw key;
+    # the built plan carries it for the coordinator's _expand_plan
+    mix = retune((QueryClass("q6", 1.0, {"scan": 4}),),
+                 {"q6": PlanConfig.make({"scan": 4}, pushdown=False)})
+    plan = mix[0].build_plan()
+    assert plan["pushdown"] is False
+    # default path: no key injected, builder output untouched
+    assert "pushdown" not in QueryClass("q6", 1.0,
+                                        {"scan": 4}).build_plan()
+    # and the same engine prices pushdown-off as whole-object reads:
+    # fewer GETs per split, more bytes — observable through the session
+    s_on = _session()
+    s_off = _session()
+    r_on = s_on.submit(("q6", {"scan": 4}))
+    spec_off = retune((QueryClass("q6", 1.0, {"scan": 4}),),
+                      {"q6": PlanConfig.make({"scan": 4},
+                                             pushdown=False)})[0]
+    r_off = s_off.coord.run_query(spec_off.build_plan())
+    assert r_off.cost.gets < r_on.cost.gets
+    assert r_off.columns_read == 0 < r_on.columns_read
+
+
+# --------------------------------------------- drift null seed sweep
+
+@pytest.mark.parametrize("seed", range(23, 33))
+def test_drift_detector_null_no_false_flags(seed, probe_summary):
+    """Flakiness guard: across 10 live-engine seeds, an unshifted run
+    must never flag (the thresholds are seeded from the probe's own null
+    spread, so false positives are a calibration regression)."""
+    det = _detector(probe_summary)
+    live = Session(sf=SF, seed=seed, compute_scale=0, max_parallel=16)
+    live.coord.attach_observer(det)
+    for _ in range(12):
+        live.submit(("q6", {"scan": 4}))
+    assert not det.flagged(), \
+        f"null run flagged at seed {seed}: " \
+        f"{[r for r in det.reports if r.flagged][:1]}"

@@ -1,0 +1,141 @@
+"""The CI regression gatekeeper itself (benchmarks/check_regression.py).
+
+Every gated suite funnels through ``check()`` and ``main()``; until this
+module, the gatekeeper had zero tests of its own. Covered: pass/fail at
+the drift threshold, the structurally-zero-baseline absolute check,
+missing-key and missing-baseline-file handling, the refresh-command text
+in the error message, suite inference from key prefixes, and exit
+codes."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import REFRESH, TOLERANCE, check, main
+from benchmarks.common import SUITES
+
+SUITE = "workload"
+KEYS = SUITES[SUITE]["keys"]
+
+
+def _rows(value=1.0, keys=KEYS):
+    return {k: {"value": value, "derived": ""} for k in keys}
+
+
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(rows))
+    return str(p)
+
+
+# ------------------------------------------------------------- check()
+
+def test_identical_runs_pass():
+    assert check(_rows(), _rows(), TOLERANCE, "b.json", SUITE) == []
+
+
+def test_drift_within_tolerance_passes():
+    assert check(_rows(1.14), _rows(1.0), 0.15, "b.json", SUITE) == []
+
+
+def test_drift_beyond_tolerance_fails_each_key():
+    fails = check(_rows(1.2), _rows(1.0), 0.15, "b.json", SUITE)
+    assert len(fails) == len(KEYS)
+    assert "drift 20.0% > 15%" in fails[0]
+
+
+def test_improvements_fail_too():
+    """The gate is two-sided: a 'better' number still invalidates the
+    committed baseline and must be refreshed deliberately."""
+    fails = check(_rows(0.5), _rows(1.0), 0.15, "b.json", SUITE)
+    assert len(fails) == len(KEYS)
+
+
+def test_zero_baseline_uses_absolute_check():
+    base = _rows(0.0)
+    assert check(_rows(0.0), base, 0.15, "b.json", SUITE) == []
+    assert check(_rows(1e-10), base, 0.15, "b.json", SUITE) == []
+    fails = check(_rows(1e-3), base, 0.15, "b.json", SUITE)
+    assert len(fails) == len(KEYS)
+    assert "vs zero baseline" in fails[0]
+
+
+def test_missing_key_in_baseline_says_refresh():
+    base = _rows()
+    gone = KEYS[0]
+    del base[gone]
+    fails = check(_rows(), base, 0.15, "path/to/b.json", SUITE)
+    assert len(fails) == 1
+    assert fails[0].startswith(f"{gone}: missing from baseline")
+    want = REFRESH.format(only=SUITES[SUITE]["refresh_only"],
+                          baseline="path/to/b.json")
+    assert want in fails[0]
+    assert "benchmarks.run --quick --only workload,breakeven" in fails[0]
+
+
+def test_missing_key_in_current_is_fewer_rows():
+    cur = _rows()
+    del cur[KEYS[0]]
+    fails = check(cur, _rows(), 0.15, "b.json", SUITE)
+    assert fails == [f"{KEYS[0]}: missing from current run (benchmark "
+                     "emitted fewer rows than the baseline)"]
+
+
+def test_failure_message_carries_refresh_command():
+    fails = check(_rows(2.0), _rows(1.0), 0.15, "benchmarks/baselines/"
+                  "BENCH_workload.json", SUITE)
+    assert "if intentional" in fails[0]
+    assert ("--json benchmarks/baselines/BENCH_workload.json"
+            in fails[0])
+    assert "docs/BENCHMARKS.md" in fails[0]
+
+
+def test_every_suite_gates_its_registered_keys():
+    for suite, spec in SUITES.items():
+        rows = _rows(keys=spec["keys"])
+        assert check(rows, rows, TOLERANCE, "b.json", suite) == []
+        fails = check(_rows(9.9, keys=spec["keys"]), rows, TOLERANCE,
+                      "b.json", suite)
+        assert len(fails) == len(spec["keys"])
+
+
+# -------------------------------------------------------------- main()
+
+def test_main_exit_codes(tmp_path):
+    cur = _write(tmp_path, "cur.json", _rows())
+    base = _write(tmp_path, "base.json", _rows())
+    drifted = _write(tmp_path, "drift.json", _rows(2.0))
+    assert main([cur, "--suite", SUITE, "--baseline", base]) == 0
+    assert main([drifted, "--suite", SUITE, "--baseline", base]) == 1
+
+
+def test_main_infers_suite_from_prefixes(tmp_path, capsys):
+    rows = _rows(keys=SUITES["adaptive"]["keys"])
+    cur = _write(tmp_path, "cur.json", rows)
+    base = _write(tmp_path, "base.json", rows)
+    assert main([cur, "--baseline", base]) == 0
+    assert "[adaptive] OK" in capsys.readouterr().out
+
+
+def test_main_falls_back_to_workload_suite(tmp_path, capsys):
+    rows = _rows(keys=SUITES["workload"]["keys"])
+    cur = _write(tmp_path, "cur.json", rows)
+    base = _write(tmp_path, "base.json", rows)
+    assert main([cur, "--baseline", base]) == 0
+    assert "[workload] OK" in capsys.readouterr().out
+
+
+def test_main_missing_baseline_file_raises(tmp_path):
+    cur = _write(tmp_path, "cur.json", _rows())
+    with pytest.raises(FileNotFoundError):
+        main([cur, "--suite", SUITE,
+              "--baseline", str(tmp_path / "nope.json")])
+
+
+def test_main_custom_tolerance(tmp_path):
+    cur = _write(tmp_path, "cur.json", _rows(1.3))
+    base = _write(tmp_path, "base.json", _rows(1.0))
+    assert main([cur, "--suite", SUITE, "--baseline", base]) == 1
+    assert main([cur, "--suite", SUITE, "--baseline", base,
+                 "--tolerance", "0.5"]) == 0
